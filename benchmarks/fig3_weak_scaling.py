@@ -1,0 +1,37 @@
+"""Paper Figs. 3-4: weak scaling FOM and FOM-per-core.
+
+The paper scales LULESH 1,000 -> 32,768 cores at fixed per-core work and
+plots (3) total FOM and (4) FOM/cores.  CPU analogue: fixed per-"rank"
+work with grid volume scaled as p^3 (p the paper's cube length), FOM
+measured for native and EASEY paths; FOM/zones is the Fig.4 analogue
+(flat = perfect weak scaling).  The 256-chip projection for the real mesh
+comes from the dry-run roofline artifacts (benchmarks/roofline_report.py).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.models import lulesh
+
+CASES = [8, 10, 13, 16, 20]     # paper's cube lengths (scaled)
+ITERS = 20
+
+
+def run(report) -> None:
+    base = None
+    for p in CASES:
+        cfg = lulesh.LuleshConfig(grid=p, iters=ITERS)
+        state = lulesh.init_state(cfg)
+        lulesh.run(state, cfg, 2)["e"].block_until_ready()
+        state = lulesh.init_state(cfg)
+        t0 = time.perf_counter()
+        lulesh.run(state, cfg, ITERS)["e"].block_until_ready()
+        dt = time.perf_counter() - t0
+        fom = lulesh.fom(p ** 3, ITERS, dt)
+        per_zone = fom / p ** 3          # Fig. 4: flat line == ideal
+        base = base or per_zone
+        report(f"fig3_weak_scaling_p{p}", dt / ITERS * 1e6,
+               f"fom={fom:.0f}")
+        report(f"fig4_fom_per_zone_p{p}", per_zone,
+               f"scaling_eff={per_zone / base:.3f}")

@@ -1,0 +1,70 @@
+"""Paper §4 'negligible overhead' claim, quantified per pipeline stage.
+
+Times every EASEY stage for a smoke LM deployment: tune, lower(build),
+package, stage+submit (middleware), and the actual execution — the
+paper's argument is that the framework cost is amortized noise; here we
+measure exactly how much it is.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core.appspec import AppSpec
+from repro.core.build import BuildService
+from repro.core.jobspec import parse_jobspec
+from repro.core.middleware import Middleware
+from repro.core.package import write_package
+
+
+def run(report) -> None:
+    app = AppSpec(arch="stablelm-1.6b-smoke", shape="train_4k",
+                  shape_overrides={"seq_len": 32, "global_batch": 2},
+                  run="train --steps 5")
+    svc = BuildService()
+
+    t0 = time.perf_counter()
+    res = svc.build(app, "local:cpu", lower=True)
+    t_build = time.perf_counter() - t0
+
+    tmp = Path(tempfile.mkdtemp(prefix="easey_ovh_"))
+    t0 = time.perf_counter()
+    pkg = write_package(res, tmp / "pkgs")
+    t_pkg = time.perf_counter() - t0
+
+    mw = Middleware(tmp / "cluster")
+    spec = parse_jobspec({
+        "job": {"name": "ovh"},
+        "deployment": {"nodes": 1},
+        "execution": [{"serial": {
+            "command": "train --steps 5 --seq-len 32 --global-batch 2 "
+                       "--arch stablelm-1.6b-smoke"}}],
+    })
+
+    t0 = time.perf_counter()
+    runner_time = {}
+
+    def runner(job, workdir, jspec):
+        from repro.launch.run import run_command
+        t = time.perf_counter()
+        out = [run_command(ex.command, job=job, workdir=workdir, spec=jspec)
+               for ex in jspec.executions]
+        runner_time["exec"] = time.perf_counter() - t
+        return out
+
+    jid = mw.submit(pkg, spec, runner=runner)
+    t_total_submit = time.perf_counter() - t0
+    t_exec = runner_time["exec"]
+    t_middleware = t_total_submit - t_exec
+
+    report("overhead_tune", res.timings["tune_s"] * 1e6, "stage=tune")
+    report("overhead_lower", res.timings["lower_s"] * 1e6, "stage=lower")
+    report("overhead_package", t_pkg * 1e6, "stage=package")
+    report("overhead_middleware", t_middleware * 1e6,
+           "stage=stage+batch+submit")
+    report("overhead_execution", t_exec * 1e6, "stage=execution")
+    framework = res.timings["tune_s"] + t_pkg + t_middleware
+    report("overhead_framework_pct", framework / t_exec * 100,
+           f"framework/exec={framework / t_exec * 100:.2f}%")

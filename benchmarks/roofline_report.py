@@ -1,0 +1,65 @@
+"""Aggregate the dry-run artifacts into the §Roofline table.
+
+Reads artifacts/dryrun/*.json (written by launch/dryrun.py) and prints
+per-cell roofline terms; also emits the markdown table EXPERIMENTS.md
+embeds.  No jax needed — pure JSON aggregation."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_records(tag: str | None = None) -> list[dict]:
+    recs = []
+    for f in sorted(ART.glob("*.json")):
+        r = json.loads(f.read_text())
+        rtag = r.get("tag", "")
+        if (tag or "") != rtag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def markdown_table(recs: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+           "bound | roofline frac | MODEL/HLO | HBM GB/chip |")
+    sep = "|" + "---|" * 10
+    rows = [hdr, sep]
+    for r in recs:
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR: {r.get('error', '?')[:60]} |" + " |" * 6)
+            continue
+        ro = r["roofline"]
+        mem = r["memory_analysis"]["per_chip_total_gb"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {ro['t_compute_s']*1e3:.1f} | {ro['t_memory_s']*1e3:.1f} "
+            f"| {ro['t_collective_s']*1e3:.1f} | {ro['bottleneck']} "
+            f"| {ro['roofline_fraction']:.3f} | {ro['useful_ratio']:.2f} "
+            f"| {mem:.1f} |")
+    return "\n".join(rows)
+
+
+def run(report) -> None:
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    for r in ok:
+        ro = r["roofline"]
+        report(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+               max(ro["t_compute_s"], ro["t_memory_s"],
+                   ro["t_collective_s"]) * 1e6,
+               f"bound={ro['bottleneck']},frac={ro['roofline_fraction']:.3f}")
+    if ok:
+        fracs = [r["roofline"]["roofline_fraction"] for r in ok]
+        report("roofline_mean_fraction", sum(fracs) / len(fracs) * 100,
+               f"cells={len(ok)}")
+
+
+if __name__ == "__main__":
+    import sys
+    tag = sys.argv[1] if len(sys.argv) > 1 else None
+    print(markdown_table(load_records(tag)))

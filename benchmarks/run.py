@@ -1,0 +1,33 @@
+"""Benchmark driver — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (harness contract)."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig3_weak_scaling, kernel_bench,
+                            overhead_breakdown, roofline_report, table1_fom)
+
+    rows: list[tuple[str, float, str]] = []
+
+    def report(name: str, us_per_call: float, derived: str = ""):
+        rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    for mod in (table1_fom, fig3_weak_scaling, overhead_breakdown,
+                kernel_bench, roofline_report):
+        try:
+            mod.run(report)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"{mod.__name__}_FAILED,0,{type(e).__name__}: {e}",
+                  flush=True)
+            traceback.print_exc(file=sys.stderr)
+    print(f"# {len(rows)} benchmark rows", flush=True)
+
+
+if __name__ == "__main__":
+    main()

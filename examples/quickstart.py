@@ -1,0 +1,53 @@
+"""Quickstart: deploy a model through EASEY in a dozen lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Writes an Appfile (the paper's Dockerfile analogue), builds it for the
+local CPU target, packages it, submits it through the middleware
+(Algorithm 1) and polls status + logs — the full Fig. 2 workflow.
+"""
+
+from pathlib import Path
+import tempfile
+
+from repro.core.appspec import AppSpec, parse_appfile
+from repro.core.jobspec import parse_jobspec
+from repro.core.workflow import run_easey
+
+APPFILE = """\
+FROM arch:deepseek-7b-smoke
+SHAPE train_4k
+###include_local_kernels###
+###include_local_collectives###
+SET vocab_size=256
+RUN train --steps 10
+"""
+
+JOBCONFIG = {
+    "job": {"name": "quickstart", "mail": "you@example.org"},
+    "deployment": {"nodes": 1, "tasks-per-node": 1, "clocktime": "00:10:00"},
+    "execution": [{"serial": {
+        "command": "train --steps 10 --seq-len 64 --global-batch 4 "
+                   "--arch deepseek-7b-smoke"}}],
+}
+
+
+def main():
+    app = parse_appfile(APPFILE)
+    app.shape_overrides = {"seq_len": 64, "global_batch": 4}
+    spec = parse_jobspec(JOBCONFIG)
+
+    mw, job_id, build = run_easey(app, "local:cpu", spec,
+                                  storage=tempfile.mkdtemp(prefix="easey_"))
+    print(f"jobID={job_id} state={mw.status(job_id).value}")
+    print("--- tuning report -------------------------------------------")
+    print(build.plan.report())
+    print("--- job stdout ----------------------------------------------")
+    out, err = mw.logs(job_id)
+    print(out)
+    if err:
+        print("STDERR:", err)
+
+
+if __name__ == "__main__":
+    main()

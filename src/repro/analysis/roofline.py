@@ -1,0 +1,89 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)        [s]
+    memory term     = HLO_bytes / (chips * HBM_bw)             [s]
+    collective term = wire_bytes / (links_used * link_bw)      [s]
+
+HLO_FLOPs / HLO_bytes / wire_bytes come from analysis/hlo.py and are
+per-device (SPMD module), so the chip division is already implicit —
+we use them directly against per-chip peak numbers.
+
+links_used: a ring reduction over one mesh axis of the 2-D ICI torus
+drives 2 links (both ring directions) concurrently; we model
+collective_time = wire_bytes_per_device / (2 x 50 GB/s) and flag the
+assumption in the report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.hlo import HloCost
+
+# TPU v5e (assignment constants)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_LINK_BW = 50e9           # bytes/s / link
+LINKS_USED = 2               # bidirectional ring over one torus axis
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    model_flops: float
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0     # MODEL_FLOPS / (HLO_FLOPs * chips)
+    roofline_fraction: float = 0.0  # t_compute / t_dominant
+    mfu_bound: float = 0.0        # model_flops/chips/peak / t_dominant
+    collective_breakdown: dict = dataclasses.field(default_factory=dict)
+    memory_per_chip: dict = dataclasses.field(default_factory=dict)
+    notes: list = dataclasses.field(default_factory=list)
+
+    def finalize(self):
+        self.t_compute = self.hlo_flops / PEAK_FLOPS
+        self.t_memory = self.hbm_bytes / HBM_BW
+        self.t_collective = self.wire_bytes / (LINKS_USED * ICI_LINK_BW)
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        t_dom = max(terms.values())
+        self.roofline_fraction = self.t_compute / t_dom if t_dom else 0.0
+        total_hlo = self.hlo_flops * self.chips
+        self.useful_ratio = self.model_flops / total_hlo if total_hlo else 0.0
+        self.mfu_bound = (self.model_flops / self.chips / PEAK_FLOPS) / t_dom \
+            if t_dom else 0.0
+        return self
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "roofline_fraction": self.roofline_fraction,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_chip": self.hlo_flops,
+            "useful_ratio": self.useful_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def from_cost(cost: HloCost, *, arch: str, shape: str, mesh: str,
+              chips: int, model_flops: float,
+              memory_per_chip: dict | None = None) -> Roofline:
+    r = Roofline(arch=arch, shape=shape, mesh=mesh, chips=chips,
+                 hlo_flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                 wire_bytes=cost.wire_bytes, model_flops=model_flops,
+                 collective_breakdown=cost.collective_breakdown,
+                 memory_per_chip=memory_per_chip or {})
+    return r.finalize()

@@ -1,0 +1,216 @@
+"""BuildService — the EASEY client's `docker build` analogue (§2.1).
+
+    AppSpec (portable) + TargetSpec (local) --tune--> DeploymentPlan
+        --lower--> SPMD program for the target mesh
+        --package--> deployable artifact (core/package.py)
+
+The directives in the Appfile are resolved here: ``###include_local_kernels###``
+selects the Pallas vs reference compute library, ``###include_local_collectives###``
+binds the sharding rules to the target mesh, ``###include_local_optimizer###``
+lets the tuner swap the optimizer variant.  The lowered/compiled program is
+the TPU equivalent of the Charliecloud image: portable spec in,
+target-optimized executable out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES
+from repro.core.appspec import AppSpec
+from repro.core.plan import DeploymentPlan
+from repro.core.target import TargetSpec, get_target
+from repro.core.tuning import tune
+from repro.launch.mesh import mesh_for_target
+from repro.models.params import (partition_specs, shape_structs, _map_table,
+                                 ParamDef)
+from repro.models.transformer import model_for
+from repro.optim import make_optimizer
+from repro.sharding.rules import (DECODE_SEQ_CACHE_RULES, DEFAULT_RULES,
+                                  SEQUENCE_PARALLEL_RULES)
+from repro.training.steps import (build_decode_step, build_prefill_step,
+                                  build_train_step, train_state_table)
+
+
+@dataclasses.dataclass
+class BuildResult:
+    appspec: AppSpec
+    target: TargetSpec
+    plan: DeploymentPlan
+    mesh: Any
+    step_name: str
+    step_fn: Callable
+    lowered: Any = None
+    compiled: Any = None
+    in_structs: tuple = ()
+    in_shardings: tuple = ()
+    out_shardings: Any = None
+    donate_argnums: tuple = ()
+    tables: dict = dataclasses.field(default_factory=dict)
+    timings: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def rules(self):
+        return SEQUENCE_PARALLEL_RULES if self.plan.sequence_parallel \
+            else DEFAULT_RULES
+
+
+class BuildService:
+    """Stateless builder; all outputs are in the BuildResult."""
+
+    def build(self, appspec: AppSpec, target: TargetSpec | str,
+              overrides: dict | None = None, lower: bool = True,
+              compile_now: bool = False) -> BuildResult:
+        t0 = time.perf_counter()
+        if isinstance(target, str):
+            target = get_target(target)
+        cfg = appspec.model_config
+        shape = appspec.shape_config
+        if cfg.family == "stencil":
+            return self._build_stencil(appspec, target, lower, t0)
+        plan = tune(cfg, shape, target, overrides)
+        # directive resolution (###include_local_kernels###)
+        if "###include_local_kernels###" not in appspec.directives:
+            plan.kernels = "reference"
+            plan.notes.append("local-kernel directive absent -> reference ops")
+        model = model_for(cfg, remat=plan.remat_policy)
+        mesh = mesh_for_target(target)
+        rules = SEQUENCE_PARALLEL_RULES if plan.sequence_parallel else DEFAULT_RULES
+        opt = make_optimizer(plan.optimizer)
+        t_tune = time.perf_counter()
+
+        fallbacks: list[str] = []
+
+        def specs(table):
+            return partition_specs(table, mesh, rules, fallbacks)
+
+        batch_table = model.batch_table(shape)
+        if shape.kind == "train":
+            state_table = train_state_table(model, opt, plan)
+            state_specs = specs(state_table)
+            step_fn = build_train_step(model, opt, plan, mesh,
+                                       param_specs=state_specs["params"])
+            in_structs = (shape_structs(state_table), shape_structs(batch_table))
+            in_shardings = (state_specs, specs(batch_table))
+            out_shardings = (in_shardings[0], None)
+            donate = (0,)
+            step_name = "train_step"
+            tables = {"state": state_table, "batch": batch_table,
+                      "params": model.param_table()}
+        elif shape.kind == "prefill":
+            param_table = model.param_table()
+            cache_table = model.cache_table(shape.global_batch, shape.seq_len)
+            step_fn = build_prefill_step(model, mesh)
+            in_structs = (shape_structs(param_table), shape_structs(batch_table))
+            in_shardings = (specs(param_table), specs(batch_table))
+            out_shardings = (None, specs(cache_table))
+            donate = ()
+            step_name = "prefill_step"
+            tables = {"params": param_table, "batch": batch_table,
+                      "cache": cache_table}
+        else:  # decode
+            param_table = model.param_table()
+            kv_len = shape.seq_len
+            cache_table = model.cache_table(shape.global_batch, kv_len)
+            step_fn = build_decode_step(model, mesh)
+            in_structs = (shape_structs(param_table), shape_structs(cache_table),
+                          shape_structs(batch_table)["tokens"])
+            # perf iteration I1: kv_heads that don't divide the model axis
+            # would replicate the cache 16x -> shard the cache seq axis
+            # (flash-decode pattern) instead
+            model_size = dict(zip(target.mesh_axes,
+                                  target.mesh_shape)).get("model", 1)
+            cache_rules = rules
+            if cfg.num_kv_heads and cfg.num_kv_heads % model_size:
+                cache_rules = DECODE_SEQ_CACHE_RULES
+                plan.notes.append(
+                    "I1: kv cache sharded on seq axis (kv_heads % model != 0)")
+            cache_specs = partition_specs(cache_table, mesh, cache_rules,
+                                          fallbacks)
+            in_shardings = (specs(param_table), cache_specs,
+                            specs(batch_table)["tokens"])
+            out_shardings = (None, cache_specs)
+            donate = (1,)
+            step_name = "decode_step"
+            tables = {"params": param_table, "batch": batch_table,
+                      "cache": cache_table}
+
+        plan.sharding_fallbacks = sorted(set(fallbacks))
+        result = BuildResult(
+            appspec=appspec, target=target, plan=plan, mesh=mesh,
+            step_name=step_name, step_fn=step_fn, in_structs=in_structs,
+            in_shardings=in_shardings, out_shardings=out_shardings,
+            donate_argnums=donate, tables=tables)
+        result.timings["tune_s"] = t_tune - t0
+
+        if lower:
+            t1 = time.perf_counter()
+            jitted = jax.jit(step_fn, in_shardings=in_shardings,
+                             out_shardings=out_shardings,
+                             donate_argnums=donate)
+            if shape.kind == "decode":
+                lowered = jitted.lower(*in_structs)
+            else:
+                lowered = jitted.lower(*in_structs)
+            result.lowered = lowered
+            result.timings["lower_s"] = time.perf_counter() - t1
+            if compile_now:
+                t2 = time.perf_counter()
+                result.compiled = lowered.compile()
+                result.timings["compile_s"] = time.perf_counter() - t2
+        return result
+
+    def _build_stencil(self, appspec: AppSpec, target: TargetSpec,
+                       lower: bool, t0: float) -> BuildResult:
+        """LULESH-family build: the deployable unit is one fused hydro
+        step on the target mesh (grid parsed from the RUN command)."""
+        import re as _re
+        from repro.models import lulesh as lu
+
+        m = _re.search(r"-s\s+(\d+)", appspec.run)
+        grid = int(m.group(1)) if m else 16
+        plan = DeploymentPlan(
+            arch=appspec.arch, shape=f"grid{grid}", target=target.name,
+            mesh_shape=target.mesh_shape, mesh_axes=target.mesh_axes,
+            kernels=target.kernels, remat_policy="none")
+        plan.notes.append("stencil app: fields sharded (grid_x->data, "
+                          "grid_y->model); dt via global all-reduce")
+        mesh = mesh_for_target(target)
+        cfg = lu.LuleshConfig(grid=grid)
+        use_mesh = mesh if target.num_chips > 1 else None
+
+        def step_fn(state):
+            return lu.step(state, cfg, use_mesh)
+
+        dt = jnp.float32
+        structs = {"rho": jax.ShapeDtypeStruct((grid,) * 3, dt),
+                   "e": jax.ShapeDtypeStruct((grid,) * 3, dt),
+                   "v": jax.ShapeDtypeStruct((3, grid, grid, grid), dt),
+                   "t": jax.ShapeDtypeStruct((), dt)}
+        result = BuildResult(
+            appspec=appspec, target=target, plan=plan, mesh=mesh,
+            step_name="sedov_step", step_fn=step_fn,
+            in_structs=(structs,), in_shardings=(None,),
+            out_shardings=None, donate_argnums=(0,),
+            tables={"state": structs})
+        result.timings["tune_s"] = time.perf_counter() - t0
+        if lower:
+            t1 = time.perf_counter()
+            result.lowered = jax.jit(step_fn, donate_argnums=(0,)).lower(structs)
+            result.timings["lower_s"] = time.perf_counter() - t1
+        return result
+
+    # -- runnable path for local targets (smoke/examples/FOM benches) --
+    def materialize(self, result: BuildResult, rng=None):
+        """Initialize real weights/state for a runnable (small) config."""
+        from repro.models.params import init_params
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        if result.step_name == "train_step":
+            return init_params(result.tables["state"], rng)
+        return init_params(result.tables["params"], rng)

@@ -1,0 +1,81 @@
+"""Package — the `ch-builder2tar` analogue (§2.1).
+
+A deployable EASEY artifact is a tarball:
+
+    manifest.json        app hash, arch, shape, target, step name, timings
+    plan.json            the DeploymentPlan (tuning decisions)
+    tuning_report.txt    human-readable report
+    Appfile              the portable spec that produced the build
+    module.stablehlo.gz  lowered StableHLO for the target mesh
+
+The StableHLO module plays the role of the container image: it is the
+exact program that will run on the target, produced without the user ever
+touching target-specific code.
+"""
+
+from __future__ import annotations
+
+import gzip
+import hashlib
+import io
+import json
+import tarfile
+import time
+from pathlib import Path
+
+from repro.core.build import BuildResult
+
+
+def write_package(result: BuildResult, out_dir: str | Path) -> Path:
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    app = result.appspec
+    name = f"{app.arch}__{app.shape}__{result.target.name.replace(':', '_')}"
+    path = out_dir / f"{name}.easey.tar"
+
+    hlo_text = result.lowered.as_text() if result.lowered is not None else ""
+    hlo_gz = gzip.compress(hlo_text.encode())
+    manifest = {
+        "app_hash": app.content_hash(),
+        "arch": app.arch,
+        "shape": app.shape,
+        "target": result.target.name,
+        "step": result.step_name,
+        "built_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "timings": result.timings,
+        "hlo_sha256": hashlib.sha256(hlo_gz).hexdigest(),
+        "mesh": {"shape": list(result.target.mesh_shape),
+                 "axes": list(result.target.mesh_axes)},
+    }
+
+    def add(tar, arcname: str, data: bytes):
+        info = tarfile.TarInfo(arcname)
+        info.size = len(data)
+        tar.addfile(info, io.BytesIO(data))
+
+    with tarfile.open(path, "w") as tar:
+        add(tar, "manifest.json", json.dumps(manifest, indent=2).encode())
+        add(tar, "plan.json", result.plan.to_json().encode())
+        add(tar, "tuning_report.txt", result.plan.report().encode())
+        add(tar, "Appfile", app.to_appfile().encode())
+        add(tar, "module.stablehlo.gz", hlo_gz)
+    return path
+
+
+def read_manifest(path: str | Path) -> dict:
+    with tarfile.open(path) as tar:
+        return json.loads(tar.extractfile("manifest.json").read())
+
+
+def extract_package(path: str | Path, workdir: str | Path) -> dict:
+    """Algorithm 1: 'Extract tar-ball and create execution environment'."""
+    workdir = Path(workdir)
+    workdir.mkdir(parents=True, exist_ok=True)
+    with tarfile.open(path) as tar:
+        tar.extractall(workdir, filter="data")
+    manifest = json.loads((workdir / "manifest.json").read_text())
+    # integrity check against the manifest hash
+    hlo_gz = (workdir / "module.stablehlo.gz").read_bytes()
+    if hashlib.sha256(hlo_gz).hexdigest() != manifest["hlo_sha256"]:
+        raise ValueError("package integrity check failed (hlo hash mismatch)")
+    return manifest

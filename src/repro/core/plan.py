@@ -1,0 +1,67 @@
+"""DeploymentPlan — the record of every decision the EASEY AutoTuner makes.
+
+This is the TPU analogue of the paper's injected "local building bricks"
+(§2.1: local MPI purge/compile, symlinks, mounts): a portable AppSpec plus
+a TargetSpec deterministically produce a DeploymentPlan, and the plan is
+shipped inside the package manifest so a deployment is reproducible and
+auditable (the paper's tuning report).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+
+@dataclasses.dataclass
+class DeploymentPlan:
+    arch: str
+    shape: str
+    target: str
+    mesh_shape: tuple[int, ...]
+    mesh_axes: tuple[str, ...]
+    microbatches: int = 1
+    remat_policy: str = "dots"            # none | dots | full
+    grad_accum_dtype: str = "float32"     # float32 | bfloat16
+    optimizer: str = "adamw"              # adamw | adamw8bit
+    kernels: str = "reference"            # pallas | reference
+    sequence_parallel: bool = False
+    grad_compression: str = "none"        # none | ef_int8
+    donate_state: bool = True
+    sharding_fallbacks: list = dataclasses.field(default_factory=list)
+    napkin: dict = dataclasses.field(default_factory=dict)
+    notes: list = dataclasses.field(default_factory=list)
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["mesh_shape"] = list(self.mesh_shape)
+        d["mesh_axes"] = list(self.mesh_axes)
+        return json.dumps(d, indent=2)
+
+    @classmethod
+    def from_json(cls, s: str) -> "DeploymentPlan":
+        d = json.loads(s)
+        d["mesh_shape"] = tuple(d["mesh_shape"])
+        d["mesh_axes"] = tuple(d["mesh_axes"])
+        return cls(**d)
+
+    def report(self) -> str:
+        lines = [f"EASEY tuning report — {self.arch} × {self.shape} on {self.target}",
+                 f"  mesh            : {dict(zip(self.mesh_axes, self.mesh_shape))}",
+                 f"  microbatches    : {self.microbatches}",
+                 f"  remat           : {self.remat_policy}",
+                 f"  grad accum dtype: {self.grad_accum_dtype}",
+                 f"  optimizer       : {self.optimizer}",
+                 f"  kernels         : {self.kernels}",
+                 f"  seq parallel    : {self.sequence_parallel}",
+                 f"  grad compression: {self.grad_compression}"]
+        if self.napkin:
+            lines.append("  napkin math:")
+            for k, v in self.napkin.items():
+                lines.append(f"    {k}: {v}")
+        for n in self.notes:
+            lines.append(f"  note: {n}")
+        for f in self.sharding_fallbacks:
+            lines.append(f"  sharding fallback: {f}")
+        return "\n".join(lines)

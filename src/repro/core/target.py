@@ -1,0 +1,76 @@
+"""TargetSpec registry — the `--target lrz:supermuc-ng` analogue (§2.1).
+
+A TargetSpec captures everything the AutoTuner needs to inject
+target-specific building bricks: chip roofline constants, HBM capacity,
+mesh topology, the local scheduler dialect, and which kernel library the
+target supports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetSpec:
+    name: str
+    chip: str                       # tpu-v5e | cpu
+    mesh_shape: tuple[int, ...]
+    mesh_axes: tuple[str, ...]
+    peak_flops: float               # per chip, bf16
+    hbm_bw: float                   # bytes/s per chip
+    hbm_bytes: float                # capacity per chip
+    ici_bw: float                   # bytes/s per link
+    scheduler: str = "slurm"        # slurm | pbs | local
+    kernels: str = "pallas"         # pallas | reference
+    description: str = ""
+
+    @property
+    def num_chips(self) -> int:
+        return math.prod(self.mesh_shape)
+
+
+# TPU v5e constants (per assignment): 197 TFLOP/s bf16, 819 GB/s HBM,
+# ~50 GB/s/link ICI, 16 GB HBM.
+_V5E = dict(peak_flops=197e12, hbm_bw=819e9, hbm_bytes=16e9, ici_bw=50e9)
+
+TARGETS: dict[str, TargetSpec] = {}
+
+
+def register(t: TargetSpec) -> TargetSpec:
+    TARGETS[t.name] = t
+    return t
+
+
+register(TargetSpec(
+    name="lrz:tpu-v5e-pod", chip="tpu-v5e",
+    mesh_shape=(16, 16), mesh_axes=("data", "model"),
+    scheduler="slurm", kernels="pallas",
+    description="single v5e pod, 256 chips, 16x16 (data, model)", **_V5E))
+
+register(TargetSpec(
+    name="lrz:tpu-v5e-2pod", chip="tpu-v5e",
+    mesh_shape=(2, 16, 16), mesh_axes=("pod", "data", "model"),
+    scheduler="slurm", kernels="pallas",
+    description="two v5e pods, 512 chips, pod axis is pure DP", **_V5E))
+
+register(TargetSpec(
+    name="local:cpu", chip="cpu",
+    mesh_shape=(1,), mesh_axes=("data",),
+    peak_flops=5e10, hbm_bw=2e10, hbm_bytes=8e9, ici_bw=1e9,
+    scheduler="local", kernels="reference",
+    description="single-process CPU debug target (smoke tests, examples)"))
+
+register(TargetSpec(
+    name="local:cpu-mesh8", chip="cpu",
+    mesh_shape=(2, 4), mesh_axes=("data", "model"),
+    peak_flops=5e10, hbm_bw=2e10, hbm_bytes=8e9, ici_bw=1e9,
+    scheduler="local", kernels="reference",
+    description="8 forced host devices — integration tests of the SPMD path"))
+
+
+def get_target(name: str) -> TargetSpec:
+    if name not in TARGETS:
+        raise KeyError(f"unknown target {name!r}; known: {sorted(TARGETS)}")
+    return TARGETS[name]

@@ -1,0 +1,175 @@
+"""AutoTuner — EASEY's `###includelocalmpi###` mechanism for TPU (§2.1).
+
+Given (ModelConfig, ShapeConfig, TargetSpec) it derives a DeploymentPlan by
+explicit napkin math over the target's memory/compute budget:
+
+* parameter + optimizer bytes per chip  -> optimizer variant (fp32 vs int8)
+* activation bytes per microbatch       -> microbatch count + remat policy
+* gradient accumulation dtype           -> fp32 unless HBM-bound
+* kernel library                        -> pallas on TPU, reference on CPU
+* sharding fallbacks                    -> recorded for the tuning report
+
+Every decision lands in the DeploymentPlan (shipped in the package
+manifest), so a deployment is as auditable as the paper's generated batch
+files.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.plan import DeploymentPlan
+from repro.core.target import TargetSpec
+
+
+def param_count_estimate(cfg: ModelConfig) -> int:
+    """Exact parameter count, straight from the model's ParamDef table
+    (metadata only — no allocation)."""
+    if cfg.family == "stencil":
+        return 0
+    from repro.models.params import param_count
+    from repro.models.transformer import model_for
+    return param_count(model_for(cfg).param_table())
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: only top-k experts active)."""
+    total = param_count_estimate(cfg)
+    if cfg.family != "moe":
+        return total
+    gated = 3 if cfg.activation in ("silu", "geglu") else 2
+    per_expert = gated * cfg.d_model * cfg.d_ff
+    inactive = (cfg.num_experts - cfg.experts_per_token) * per_expert * cfg.num_layers
+    return total - inactive
+
+
+def tune(cfg: ModelConfig, shape: ShapeConfig, target: TargetSpec,
+         overrides: dict | None = None) -> DeploymentPlan:
+    chips = target.num_chips
+    plan = DeploymentPlan(
+        arch=cfg.name, shape=shape.name, target=target.name,
+        mesh_shape=target.mesh_shape, mesh_axes=target.mesh_axes,
+        kernels=target.kernels)
+
+    P = param_count_estimate(cfg)
+    param_bytes = 2 * P  # bf16
+    plan.napkin["params"] = f"{P/1e9:.2f}B"
+    plan.napkin["param_bytes_per_chip"] = f"{param_bytes/chips/1e9:.3f} GB"
+
+    if shape.kind == "train":
+        budget = 0.85 * target.hbm_bytes
+        fixed = param_bytes / chips
+        grad_fp32 = 4 * P / chips
+        opt_fp32 = 8 * P / chips
+        plan.napkin["opt_fp32_per_chip"] = f"{opt_fp32/1e9:.2f} GB"
+        # minimum activation footprint (full remat, max microbatches) —
+        # used to decide the optimizer variant up front
+        axes0 = dict(zip(target.mesh_axes, target.mesh_shape))
+        bs0 = axes0.get("pod", 1) * axes0.get("data", 1)
+        mm0 = max(int(shape.global_batch // bs0), 1)
+        w0 = cfg.d_model if cfg.family not in ("ssm_xlstm", "hybrid_mamba") \
+            else (cfg.ssm_expand + 1) * cfg.d_model
+        L0 = cfg.num_layers + cfg.num_encoder_layers
+        min_act = 3.5 * (shape.global_batch * shape.seq_len / bs0 / mm0) * \
+            L0 * w0 * 2
+        if fixed + opt_fp32 + grad_fp32 + min_act > budget:
+            plan.optimizer = "adamw8bit"
+            opt_bytes = (2 * P + 8 * max(P // 128, 1)) / chips
+            plan.notes.append(
+                "fp32 Adam moments + activations exceed HBM -> int8 moments")
+        else:
+            plan.optimizer = "adamw"
+            opt_bytes = opt_fp32
+        # --- grad accumulation dtype (may be escalated by the ladder) ---
+        if fixed + opt_bytes + grad_fp32 > budget:
+            plan.grad_accum_dtype = "bfloat16"
+            grad_bytes = 2 * P / chips
+            plan.notes.append("fp32 grad accumulator exceeds budget -> bf16")
+        else:
+            grad_bytes = grad_fp32
+        headroom = budget - fixed - opt_bytes - grad_bytes
+        plan.napkin["headroom_for_activations"] = f"{headroom/1e9:.2f} GB"
+        headroom_bf16_grads = budget - fixed - opt_bytes - 2 * P / chips
+
+        # --- microbatches / remat / SP escalation ladder (perf iter I2) ---
+        # Empirical calibration from the dry-run memory_analysis (see
+        # EXPERIMENTS.md §Perf): XLA temp ~= FACTOR x (stacked layer inputs
+        # per microbatch per device), FACTOR ~6 under 'dots' remat, ~3.5
+        # under full remat (recompute working set + loop double-buffering).
+        axes = dict(zip(target.mesh_axes, target.mesh_shape))
+        batch_shards = axes.get("pod", 1) * axes.get("data", 1)
+        model_size = axes.get("model", 1)
+        L_eff = cfg.num_layers + cfg.num_encoder_layers
+        tokens_local = shape.global_batch * shape.seq_len / batch_shards
+        per_layer_width = cfg.d_model
+        if cfg.family in ("ssm_xlstm", "hybrid_mamba"):
+            per_layer_width = (cfg.ssm_expand + 1) * cfg.d_model
+
+        def est_temp(micro, factor, seq_shards=1):
+            saved = (tokens_local / micro) * L_eff * per_layer_width * 2
+            return factor * saved / seq_shards
+
+        max_micro = max(int(shape.global_batch // batch_shards), 1)
+        # escalation ladder, cheapest knob first: each config is
+        # (remat, factor, seq_parallel, bf16_grads).  Microbatches are the
+        # inner loop (fewest first — per-micro FSDP weight re-gathers make
+        # micro the most expensive collective knob, measured in it1/it2).
+        # SP is skipped for MoE (I2b: expert dispatch reshards per chunk).
+        ladder = [("dots", 6.0, False, False), ("full", 3.5, False, False),
+                  ("dots", 6.0, False, True), ("full", 3.5, False, True)]
+        if cfg.family != "moe":
+            ladder += [("dots", 6.0, True, False), ("full", 3.5, True, False),
+                       ("dots", 6.0, True, True), ("full", 3.5, True, True)]
+        chosen = None
+        for remat, factor, sp, bf16g in ladder:
+            room = headroom_bf16_grads if bf16g else headroom
+            shards = model_size if sp else 1
+            micro = 1
+            while micro <= max_micro:
+                if shape.global_batch % micro == 0 and \
+                        est_temp(micro, factor, shards) <= room:
+                    chosen = (remat, micro, sp, bf16g)
+                    break
+                micro *= 2
+            if chosen:
+                break
+        if not chosen:
+            chosen = ("full", max_micro, cfg.family != "moe", True)
+            plan.notes.append("I2: memory estimate exceeds HBM even at the "
+                              "top of the escalation ladder")
+        plan.remat_policy, plan.microbatches, plan.sequence_parallel, bf16g = chosen
+        if bf16g and plan.grad_accum_dtype != "bfloat16":
+            plan.grad_accum_dtype = "bfloat16"
+            plan.notes.append("I2: bf16 grad accumulation (ladder escalation)")
+        if chosen[2]:
+            plan.notes.append("I2: sequence-parallel activations "
+                              "(saved tensors shard over the model axis)")
+        factor = 6.0 if plan.remat_policy == "dots" else 3.5
+        shards = model_size if plan.sequence_parallel else 1
+        plan.napkin["est_temp_per_chip"] = (
+            f"{est_temp(plan.microbatches, factor, shards) / 1e9:.2f} GB")
+    else:
+        plan.microbatches = 1
+        plan.remat_policy = "none"
+        # decode/prefill memory: params + kv cache
+        if cfg.family in ("dense", "moe", "vlm", "encdec"):
+            kv = (2 * cfg.num_layers * shape.global_batch * shape.seq_len *
+                  cfg.num_kv_heads * cfg.head_dim * 2)
+            if cfg.family == "encdec":
+                kv *= 2
+            plan.napkin["kv_cache_per_chip"] = f"{kv/chips/1e9:.3f} GB"
+
+    # --- long-context sequence parallelism ---
+    if shape.kind != "train" and shape.seq_len >= 131072 and \
+            shape.global_batch < dict(zip(target.mesh_axes, target.mesh_shape)).get("data", 1):
+        plan.sequence_parallel = True
+        plan.notes.append("batch smaller than data axis at long context -> "
+                          "sequence-parallel activations")
+
+    if overrides:
+        for k, v in overrides.items():
+            setattr(plan, k, v)
+    return plan

@@ -1,0 +1,44 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+`interpret` defaults to True unless running on a real TPU — the EASEY
+AutoTuner flips the implementation per target (plan.kernels), which is the
+paper's `###includelocalmpi###` mechanism applied to compute libraries.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.sedov_stencil import cfl_dt, sedov_step_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, w, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return rmsnorm_pallas(x, w, eps=eps, block_rows=block_rows,
+                          interpret=interpret)
+
+
+def sedov_step_kernel(state: dict, cfg, block_x: int = 16,
+                      interpret: bool | None = None) -> dict:
+    """Fused LULESH step: global CFL reduction + Pallas stencil update."""
+    interpret = _default_interpret() if interpret is None else interpret
+    dt = cfl_dt(state)
+    return sedov_step_pallas(state, dt, block_x=block_x, interpret=interpret)

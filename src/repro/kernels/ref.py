@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """Plain full-softmax GQA attention in fp32. Shapes as the kernel."""
+    b, s, H, dh = q.shape
+    t, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(b, s, K, G, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, H, dh).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def sedov_step_ref(state: dict, mesh=None) -> dict:
+    """One oracle hydro step (dt computed inside, as models/lulesh.step)."""
+    from repro.models.lulesh import LuleshConfig, step
+    cfg = LuleshConfig(grid=state["rho"].shape[0])
+    return step(state, cfg, mesh)

@@ -1,0 +1,156 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape x mesh) cell:
+    jax.jit(step).lower(**input_specs).compile()
+on the production meshes — 16x16 single pod and 2x16x16 multi-pod — with
+512 forced host devices.  Prints memory_analysis / cost_analysis, runs the
+while-aware HLO cost model, derives the three roofline terms and dumps one
+JSON artifact per cell under artifacts/dryrun/.
+
+Usage:
+    python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh single
+    python -m repro.launch.dryrun --all --mesh multi --skip-existing
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax        # noqa: E402
+
+from repro.analysis import hlo as hlo_mod          # noqa: E402
+from repro.analysis.flops import model_flops       # noqa: E402
+from repro.analysis.roofline import from_cost      # noqa: E402
+from repro.configs import ARCHS, SHAPES, cells, get_config  # noqa: E402
+from repro.core.appspec import AppSpec             # noqa: E402
+from repro.core.build import BuildService          # noqa: E402
+from repro.core.target import get_target           # noqa: E402
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+MESHES = {"single": "lrz:tpu-v5e-pod", "multi": "lrz:tpu-v5e-2pod"}
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell —
+    weak-type-correct, shardable, no device allocation."""
+    from repro.models.params import shape_structs
+    from repro.models.transformer import model_for
+    cfg = get_config(arch)
+    model = model_for(cfg)
+    return shape_structs(model.batch_table(SHAPES[shape_name]))
+
+
+def run_cell(arch: str, shape_name: str, mesh_key: str,
+             overrides: dict | None = None, out_dir: Path = ART,
+             tag: str = "") -> dict:
+    target = get_target(MESHES[mesh_key])
+    app = AppSpec(arch=arch, shape=shape_name)
+    svc = BuildService()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_key,
+           "target": target.name, "status": "ok", "tag": tag}
+    t0 = time.perf_counter()
+    try:
+        result = svc.build(app, target, overrides=overrides, lower=True)
+        rec["lower_s"] = result.timings.get("lower_s")
+        t1 = time.perf_counter()
+        compiled = result.lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t1
+
+        ma = compiled.memory_analysis()
+        mem = {k: float(getattr(ma, k, 0) or 0) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")}
+        mem["per_chip_total_gb"] = (
+            mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]) / 1e9
+        rec["memory_analysis"] = mem
+        print(f"[{arch} x {shape_name} x {mesh_key}] memory_analysis: "
+              f"args={mem['argument_size_in_bytes']/1e9:.2f}GB "
+              f"temp={mem['temp_size_in_bytes']/1e9:.2f}GB")
+
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis"] = {"flops": float(ca.get("flops", -1)),
+                                "bytes_accessed": float(ca.get("bytes accessed", -1))}
+        print(f"  cost_analysis (scan-body-once): flops={rec['cost_analysis']['flops']:.3e}")
+
+        t2 = time.perf_counter()
+        text = compiled.as_text()
+        cost = hlo_mod.analyze(text, total_devices=target.num_chips)
+        rec["hlo_parse_s"] = time.perf_counter() - t2
+        mf = model_flops(app.model_config, app.shape_config)
+        roof = from_cost(cost, arch=arch, shape=shape_name, mesh=mesh_key,
+                         chips=target.num_chips, model_flops=mf["total"],
+                         memory_per_chip=mem)
+        rec["hlo_cost"] = {
+            "flops_per_chip": cost.flops, "hbm_bytes_per_chip": cost.hbm_bytes,
+            "wire_bytes_per_chip": cost.wire_bytes,
+            "collectives": cost.collective_breakdown,
+            "while_trips": cost.while_trips, "dot_count": cost.dot_count}
+        rec["model_flops"] = mf
+        rec["roofline"] = roof.row()
+        rec["plan"] = json.loads(result.plan.to_json())
+        rec["fallbacks"] = result.plan.sharding_fallbacks
+        print(f"  roofline: compute={roof.t_compute*1e3:.1f}ms "
+              f"memory={roof.t_memory*1e3:.1f}ms "
+              f"collective={roof.t_collective*1e3:.1f}ms "
+              f"-> {roof.bottleneck}-bound, fraction={roof.roofline_fraction:.2f}")
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-3000:]
+        print(f"[{arch} x {shape_name} x {mesh_key}] FAILED: {rec['error']}")
+    rec["total_s"] = time.perf_counter() - t0
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    out = out_dir / f"{arch}__{shape_name}__{mesh_key}{suffix}.json"
+    out.write_text(json.dumps(rec, indent=2, default=str))
+    print(f"  wrote {out} ({rec['total_s']:.1f}s total)")
+    return rec
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch")
+    p.add_argument("--shape")
+    p.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--skip-existing", action="store_true")
+    p.add_argument("--tag", default="")
+    p.add_argument("--overrides", default="", help="JSON plan overrides")
+    a = p.parse_args(argv)
+
+    meshes = ["single", "multi"] if a.mesh == "both" else [a.mesh]
+    overrides = json.loads(a.overrides) if a.overrides else None
+    todo = []
+    if a.all:
+        for arch, shape, skipped in cells():
+            for mk in meshes:
+                todo.append((arch, shape, mk))
+    else:
+        assert a.arch and a.shape, "--arch/--shape or --all"
+        todo = [(a.arch, a.shape, mk) for mk in meshes]
+
+    ok = err = skip = 0
+    for arch, shape, mk in todo:
+        suffix = f"__{a.tag}" if a.tag else ""
+        out = ART / f"{arch}__{shape}__{mk}{suffix}.json"
+        if a.skip_existing and out.exists() and \
+                json.loads(out.read_text()).get("status") == "ok":
+            skip += 1
+            continue
+        rec = run_cell(arch, shape, mk, overrides=overrides, tag=a.tag)
+        ok += rec["status"] == "ok"
+        err += rec["status"] != "ok"
+    print(f"dry-run summary: {ok} ok, {err} failed, {skip} skipped-existing")
+    return 1 if err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

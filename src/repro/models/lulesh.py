@@ -1,0 +1,124 @@
+"""LULESH-analogue: Sedov-blast hydrodynamics proxy (the paper's §4 app).
+
+The paper evaluates EASEY by deploying the DASH/PGAS port of LULESH
+(Livermore Unstructured Lagrangian Explicit Shock Hydrodynamics) on
+SuperMUC-NG.  TPU adaptation (DESIGN.md §2): the unstructured PGAS mesh
+becomes a structured 3-D grid sharded over the ("data","model") mesh axes;
+DASH's hierarchical-locality halo reads become XLA-inserted collective
+permutes; the per-zone hot loop becomes a fused Pallas stencil kernel
+(kernels/sedov_stencil.py — this module is its pure-jnp oracle).
+
+Physics (simplified staggered-free Sedov proxy, 6-point stencil):
+  p   = (gamma-1)·rho·e                       ideal-gas EOS
+  a   = -grad(p+q)/rho ; v += dt·a            momentum
+  dv  = div(v)                                volume strain rate
+  q   = c_q·rho·dv²  where dv<0 else 0        artificial viscosity
+  e  += -dt·(p+q)·dv/rho ; rho -= dt·rho·dv   energy / mass
+  dt  = CFL·min(dx/(c_s+|v|))                 global reduction (all-reduce)
+
+FOM is LULESH's: zones × iterations / seconds (higher is better).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import shard_constraint
+
+GAMMA = 1.4
+C_Q = 2.0
+CFL = 0.3
+
+
+@dataclasses.dataclass(frozen=True)
+class LuleshConfig:
+    name: str = "lulesh-dash"
+    family: str = "stencil"
+    grid: int = 48                 # cube side (zones per side)
+    iters: int = 10
+    dtype: object = jnp.float32
+
+
+FIELD_AXES = ("act_grid_x", "act_grid_y", "act_grid_z")
+
+
+def init_state(cfg: LuleshConfig):
+    """Sedov problem: cold uniform gas, energy spike at the corner zone."""
+    n = cfg.grid
+    rho = jnp.ones((n, n, n), cfg.dtype)
+    e = jnp.full((n, n, n), 1e-6, cfg.dtype)
+    e = e.at[0, 0, 0].set(3.948746e7)  # LULESH's initial energy deposition
+    v = jnp.zeros((3, n, n, n), cfg.dtype)
+    return {"rho": rho, "e": e, "v": v, "t": jnp.zeros((), cfg.dtype)}
+
+
+def _shift(f, axis, d):
+    """Neighbor value along axis with reflective (edge-clamped) boundary."""
+    n = f.shape[axis]
+    if d > 0:
+        sl = jax.lax.slice_in_dim(f, 1, n, axis=axis)
+        edge = jax.lax.slice_in_dim(f, n - 1, n, axis=axis)
+        return jnp.concatenate([sl, edge], axis=axis)
+    sl = jax.lax.slice_in_dim(f, 0, n - 1, axis=axis)
+    edge = jax.lax.slice_in_dim(f, 0, 1, axis=axis)
+    return jnp.concatenate([edge, sl], axis=axis)
+
+
+def _grad(f, dx):
+    return jnp.stack([( _shift(f, a, +1) - _shift(f, a, -1)) / (2 * dx)
+                      for a in range(3)])
+
+
+def _div(v, dx):
+    return sum((_shift(v[a], a, +1) - _shift(v[a], a, -1)) / (2 * dx)
+               for a in range(3))
+
+
+def step(state, cfg: LuleshConfig, mesh=None, dx: float = 1.0):
+    """One explicit hydro step. Pure-jnp oracle for the Pallas kernel."""
+    rho, e, v = state["rho"], state["e"], state["v"]
+    rho = shard_constraint(rho, FIELD_AXES, mesh)
+    e = shard_constraint(e, FIELD_AXES, mesh)
+
+    p = (GAMMA - 1.0) * rho * e
+    dv = _div(v, dx)
+    q = jnp.where(dv < 0, C_Q * rho * dv * dv, 0.0).astype(p.dtype)
+
+    # global CFL reduction -> all-reduce on the device mesh
+    cs = jnp.sqrt(GAMMA * p / jnp.maximum(rho, 1e-12))
+    vmag = jnp.sqrt((v * v).sum(0))
+    dt = CFL * dx / jnp.max(cs + vmag + 1e-12)
+
+    g = _grad(p + q, dx)
+    v = v - dt * g / jnp.maximum(rho, 1e-12)[None]
+    v = shard_constraint(v, (None,) + FIELD_AXES, mesh)
+    dv = _div(v, dx)
+    e = e - dt * (p + q) * dv / jnp.maximum(rho, 1e-12)
+    e = jnp.maximum(e, 0.0)
+    rho = jnp.maximum(rho * (1.0 - dt * dv), 1e-12)
+    return {"rho": rho, "e": e, "v": v, "t": state["t"] + dt}
+
+
+@partial(jax.jit, static_argnames=("cfg", "iters", "use_kernel"))
+def run(state, cfg: LuleshConfig, iters: int, mesh=None, use_kernel: bool = False):
+    """`iters` steps via lax.scan (the '-i' flag of the paper's Listing 1.5)."""
+    if use_kernel:
+        from repro.kernels.ops import sedov_step_kernel
+        step_fn = lambda s: sedov_step_kernel(s, cfg)
+    else:
+        step_fn = lambda s: step(s, cfg, mesh)
+
+    def body(s, _):
+        return step_fn(s), None
+
+    state, _ = jax.lax.scan(body, state, None, length=iters)
+    return state
+
+
+def fom(zones: int, iters: int, seconds: float) -> float:
+    """LULESH figure-of-merit: zone-iterations per second."""
+    return zones * iters / max(seconds, 1e-12)

@@ -1,0 +1,357 @@
+"""Mamba2 (SSD) blocks + Zamba2-style hybrid backbone — arch `zamba2-7b`.
+
+Zamba2 = a stack of Mamba2 blocks with a **shared** transformer block
+(attention + MLP, one set of weights) applied every `shared_attn_period`
+Mamba layers.  Training/prefill use the chunkwise SSD algorithm (scan over
+chunks, quadratic only within a chunk); decode is the O(1)-state
+recurrence.  At 500k context the shared attention block uses its sliding
+window (cfg.window) so the whole model stays sub-quadratic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.params import ParamDef, init_params
+from repro.models.ssm import causal_conv
+from repro.models.transformer import BaseLM, stack_defs, remat_wrap
+from repro.sharding.rules import shard_constraint
+
+# ---------------------------------------------------------------------------
+# SSD (state-space duality) core, chunkwise.
+
+
+def _segsum(x):
+    """x: (..., q). Returns (..., q, q) with S[i,j] = sum_{j<t<=i} x_t (i>=j)."""
+    q = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    s = c[..., :, None] - c[..., None, :]
+    return jnp.where(jnp.tril(jnp.ones((q, q), bool)), s, -jnp.inf)
+
+
+def ssd_chunkwise(x, dt, A, B, C, D, state, chunk: int):
+    """Chunkwise SSD.
+
+    x: (b, l, h, p)   inputs per head
+    dt: (b, l, h)     positive step sizes (after softplus+bias)
+    A: (h,)           negative decay rates (=-exp(A_log))
+    B, C: (b, l, n)   shared across heads (single group)
+    D: (h,)           skip connection
+    state: (b, h, p, n) or None
+    Returns (y (b,l,h,p), final_state).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    if l % chunk:  # ragged tail -> recurrence (exact)
+        cut = (l // chunk) * chunk
+        if cut == 0:
+            return ssd_recurrent_ref(x, dt, A, B, C, D, state)
+        y0, state = ssd_chunkwise(x[:, :cut], dt[:, :cut], A, B[:, :cut],
+                                  C[:, :cut], D, state, chunk)
+        y1, state = ssd_recurrent_ref(x[:, cut:], dt[:, cut:], A, B[:, cut:],
+                                      C[:, cut:], D, state)
+        return jnp.concatenate([y0, y1], axis=1), state
+    nc = l // chunk
+    dA = dt * A[None, None, :]                       # (b, l, h) negative
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    dAc = dA.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)   # (b,h,nc,q)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    if state is None:
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def body(S, xs):
+        xi, dti, dAi, Bi, Ci = xs       # xi (b,q,h,p), dAi (b,h,q), B/C (b,q,n)
+        a = jnp.cumsum(dAi, axis=-1)                              # (b,h,q) inclusive
+        Lmat = jnp.exp(_segsum(dAi))                              # (b,h,q,q)
+        CB = jnp.einsum("bin,bjn->bij", Ci, Bi)                   # (b,q,q)
+        y_diag = jnp.einsum("bij,bhij,bjh,bjhp->bihp", CB, Lmat, dti, xi)
+        # inter-chunk: contribution of incoming state
+        decay_in = jnp.exp(a)                                     # (b,h,q)
+        y_off = jnp.einsum("bin,bhpn,bhi->bihp", Ci, S, decay_in)
+        # state update: decay from position j to end of chunk
+        decay_out = jnp.exp(a[..., -1:] - a)                      # (b,h,q)
+        S_new = jnp.exp(a[..., -1])[..., None, None] * S + \
+            jnp.einsum("bjn,bhj,bjh,bjhp->bhpn", Bi, decay_out, dti, xi)
+        return S_new, y_diag + y_off
+
+    xs = (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+          dAc.transpose(2, 0, 1, 3), Bc.transpose(1, 0, 2, 3),
+          Cc.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(body, state, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, l, h, p)
+    return y + x * D[None, None, :, None], state
+
+
+def ssd_decode(x, dt, A, B, C, D, state):
+    """Single-step recurrence. x: (b,1,h,p); B,C: (b,1,n); state (b,h,p,n)."""
+    dA = jnp.exp(dt[:, 0, :, None, None] * A[None, :, None, None])  # (b,h,1,1)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], B[:, 0], x[:, 0])
+    state = dA * state + dBx
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0], state)[:, None]
+    return y + x * D[None, None, :, None], state
+
+
+def ssd_recurrent_ref(x, dt, A, B, C, D, state):
+    """Step-by-step oracle for tests."""
+    b, l, h, p = x.shape
+    if state is None:
+        state = jnp.zeros((b, h, p, B.shape[-1]), jnp.float32)
+    ys = []
+    for t in range(l):
+        y, state = ssd_decode(x[:, t:t + 1], dt[:, t:t + 1], A,
+                              B[:, t:t + 1], C[:, t:t + 1], D, state)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+
+
+def mamba_block_defs(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    conv_dim = di + 2 * n
+    return {
+        "ln": L.norm_defs(d, cfg.norm),
+        "w_in": ParamDef((d, 2 * di + 2 * n + h), ("embed", "mlp")),
+        "conv_w": ParamDef((cfg.conv_width, conv_dim), ("conv", "mlp")),
+        "A_log": ParamDef((h,), ("heads",), jnp.float32, "zeros"),
+        "D": ParamDef((h,), ("heads",), jnp.float32, "ones"),
+        "dt_bias": ParamDef((h,), ("heads",), jnp.float32, "zeros"),
+        "gn": ParamDef((di,), ("mlp",), init="ones"),
+        "w_out": ParamDef((di, d), ("mlp", "embed")),
+    }
+
+
+def mamba_block_apply(p, x, cfg, mesh, mode, cache, chunk):
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    hp = di // h
+    res = x
+    xin = L.apply_norm(p["ln"], x, cfg.norm)
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, p["w_in"])
+    z, xbc, dt_pre = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    conv_state = cache.get("conv") if cache else None
+    xbc, new_conv = causal_conv(xbc, p["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, B, C = jnp.split(xbc, [di, di + n], axis=-1)
+    xs = xs.reshape(b, s, h, hp)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ssm_state = cache["ssm"] if cache else None
+    if mode == "decode" and s == 1:
+        y, new_state = ssd_decode(xs.astype(jnp.float32), dt, A,
+                                  B.astype(jnp.float32), C.astype(jnp.float32),
+                                  p["D"], ssm_state)
+    else:
+        y, new_state = ssd_chunkwise(xs.astype(jnp.float32), dt, A,
+                                     B.astype(jnp.float32), C.astype(jnp.float32),
+                                     p["D"], ssm_state, min(chunk, s))
+    y = y.reshape(b, s, di)
+    # gated RMSNorm (mamba2 style): norm(y * silu(z))
+    y = L.rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), p["gn"])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    out = shard_constraint(out, ("act_batch", "act_seq", "act_embed"), mesh)
+    new_cache = {"ssm": new_state, "conv": new_conv}
+    return res + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid
+
+
+class ZambaHybrid(BaseLM):
+    """`num_layers` Mamba2 blocks; one SHARED attention+MLP block applied
+    after every `shared_attn_period`-th mamba layer."""
+
+    def _layout(self):
+        cfg = self.cfg
+        per = cfg.shared_attn_period
+        segs = cfg.num_layers // per          # full segments, then remainder
+        rem = cfg.num_layers - segs * per
+        return per, segs, rem
+
+    def shared_block_defs(self) -> dict:
+        cfg = self.cfg
+        return {"ln1": L.norm_defs(cfg.d_model, cfg.norm),
+                "attn": L.attention_defs(cfg),
+                "ln2": L.norm_defs(cfg.d_model, cfg.norm),
+                "mlp": L.mlp_defs(cfg)}
+
+    def param_table(self) -> dict:
+        cfg = self.cfg
+        per, segs, rem = self._layout()
+        t = {
+            "embed": L.embed_defs(cfg),
+            "mamba": stack_defs(stack_defs(mamba_block_defs(cfg), per), segs),
+            "shared": self.shared_block_defs(),   # ONE copy, reused `segs` times
+            "ln_f": L.norm_defs(cfg.d_model, cfg.norm),
+        }
+        if rem:
+            t["mamba_tail"] = stack_defs(mamba_block_defs(cfg), rem)
+        return t
+
+    def cache_table(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        per, segs, rem = self._layout()
+        di = cfg.ssm_expand * cfg.d_model
+        h, n = cfg.ssm_heads, cfg.ssm_state
+        hp = di // h
+        conv_dim = di + 2 * n
+        kv_len = min(max_len, cfg.window) if cfg.window else max_len
+
+        def m_def(lead, shape, axes, dtype=jnp.float32):
+            return ParamDef(lead + shape, ("layers",) * len(lead) + axes,
+                            dtype, "zeros")
+
+        t = {
+            "mamba": {
+                "ssm": m_def((segs, per), (batch, h, hp, n),
+                             ("act_batch", "act_heads", None, None)),
+                "conv": m_def((segs, per), (batch, cfg.conv_width - 1, conv_dim),
+                              ("act_batch", None, "act_mlp"), cfg.activation_dtype),
+            },
+            # per-invocation KV cache for the shared block (weights shared,
+            # cache not!)
+            "shared_kv": {
+                "k": m_def((segs,), (batch, kv_len, cfg.num_kv_heads, cfg.head_dim),
+                           ("act_batch", "act_seq", "act_kv_heads", None),
+                           cfg.activation_dtype),
+                "v": m_def((segs,), (batch, kv_len, cfg.num_kv_heads, cfg.head_dim),
+                           ("act_batch", "act_seq", "act_kv_heads", None),
+                           cfg.activation_dtype),
+            },
+            "index": ParamDef((), (), jnp.int32, "zeros"),
+        }
+        if rem:
+            t["mamba_tail"] = {
+                "ssm": m_def((rem,), (batch, h, hp, n),
+                             ("act_batch", "act_heads", None, None)),
+                "conv": m_def((rem,), (batch, cfg.conv_width - 1, conv_dim),
+                              ("act_batch", None, "act_mlp"), cfg.activation_dtype),
+            }
+        return t
+
+    def shared_block_apply(self, p, x, mesh, positions, mode, kv_cache):
+        cfg = self.cfg
+        h = L.apply_norm(p["ln1"], x, cfg.norm)
+        attn_out, new_kv = L.attention(
+            p["attn"], h, cfg, mesh, positions=positions, mode=mode,
+            cache=kv_cache, window=cfg.window or None)
+        x = x + attn_out
+        h = L.apply_norm(p["ln2"], x, cfg.norm)
+        return x + L.mlp(p["mlp"], h, cfg, mesh), new_kv
+
+    def backbone(self, params, x, positions, mesh, mode, cache=None):
+        cfg = self.cfg
+        per, segs, rem = self._layout()
+        chunk = cfg.ssm_chunk
+        use_cache = cache is not None
+        if not use_cache:
+            zeros = init_params(self.cache_table(x.shape[0], 0), jax.random.PRNGKey(0))
+            mamba_c = zeros["mamba"]
+            tail_c = zeros.get("mamba_tail")
+        else:
+            mamba_c = cache["mamba"]
+            tail_c = cache.get("mamba_tail")
+
+        def mamba_scan(y, mp, mc):
+            def body(carry, xs):
+                bp, c = xs
+                out, nc = mamba_block_apply(bp, carry, cfg, mesh, mode, c, chunk)
+                return out, nc
+            fn = remat_wrap(body, self.remat) if mode == "full" else body
+            return jax.lax.scan(fn, y, (mp, mc))
+
+        def seg_body(carry, xs):
+            y = carry
+            mp, mc, kvk, kvv = xs
+            y, new_mc = mamba_scan(y, mp, mc)
+            kv = None
+            if mode == "decode":
+                kv = {"k": kvk, "v": kvv, "index": cache["index"]}
+            y, new_kv = self.shared_block_apply(params["shared"], y, mesh,
+                                                positions, mode, kv)
+            if new_kv is None:
+                new_kv = {"k": kvk, "v": kvv}
+            return y, (new_mc, new_kv["k"], new_kv["v"])
+
+        per_seg_kv = (cache["shared_kv"]["k"], cache["shared_kv"]["v"]) if use_cache \
+            else (jnp.zeros((segs, 0)), jnp.zeros((segs, 0)))
+        if not use_cache:
+            # prefill/full without prior cache: shared block runs mode='full'
+            # or 'prefill'; KV collected via ys when prefill
+            def seg_body_nc(carry, xs):
+                y = carry
+                mp, mc = xs
+                y, new_mc = mamba_scan(y, mp, mc)
+                y, new_kv = self.shared_block_apply(params["shared"], y, mesh,
+                                                    positions, mode, None)
+                ys = (new_mc,) + ((new_kv["k"], new_kv["v"]) if new_kv else ())
+                return y, ys
+
+            x, ys = jax.lax.scan(seg_body_nc, x, (params["mamba"], mamba_c))
+            new_mamba = ys[0]
+            new_kv = {"k": ys[1], "v": ys[2]} if mode == "prefill" else None
+        else:
+            x, (new_mamba, nk, nv) = jax.lax.scan(
+                seg_body, x, (params["mamba"], mamba_c) + per_seg_kv)
+            new_kv = {"k": nk, "v": nv}
+
+        new_tail = None
+        if rem:
+            def tail_body(carry, xs):
+                bp, c = xs
+                out, nc = mamba_block_apply(bp, carry, cfg, mesh, mode, c, chunk)
+                return out, nc
+            fn = remat_wrap(tail_body, self.remat) if mode == "full" else tail_body
+            x, new_tail = jax.lax.scan(fn, x, (params["mamba_tail"], tail_c))
+
+        if mode == "full":
+            return x, None
+        new_cache = {"mamba": new_mamba, "shared_kv": new_kv,
+                     "index": (cache["index"] if use_cache
+                               else jnp.asarray(0, jnp.int32)) + x.shape[1]}
+        if rem:
+            new_cache["mamba_tail"] = new_tail
+        return x, new_cache
+
+    # ---- entry points (same pattern as DenseLM) ----
+    def loss(self, params, batch, mesh):
+        cfg = self.cfg
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = L.embed(params["embed"], batch["tokens"], cfg, mesh, positions=positions)
+        x, _ = self.backbone(params, x, positions, mesh, "full")
+        x = L.apply_norm(params["ln_f"], x, cfg.norm)
+        logits = L.unembed(params["embed"], x, cfg, mesh)
+        loss = L.softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+        return loss, {"loss": loss}
+
+    def prefill(self, params, batch, mesh):
+        cfg = self.cfg
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = L.embed(params["embed"], batch["tokens"], cfg, mesh, positions=positions)
+        x, cache = self.backbone(params, x, positions, mesh, "prefill")
+        x = L.apply_norm(params["ln_f"], x[:, -1:], cfg.norm)
+        return L.unembed(params["embed"], x, cfg, mesh), cache
+
+    def decode_step(self, params, cache, tokens, mesh):
+        cfg = self.cfg
+        b, s = tokens.shape
+        positions = cache["index"] + jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = L.embed(params["embed"], tokens, cfg, mesh, positions=positions)
+        x, cache = self.backbone(params, x, positions, mesh, "decode", cache)
+        x = L.apply_norm(params["ln_f"], x, cfg.norm)
+        return L.unembed(params["embed"], x, cfg, mesh), cache

@@ -1,0 +1,439 @@
+"""xLSTM (sLSTM + mLSTM blocks) — arch `xlstm-1.3b`.
+
+mLSTM: matrix-memory cell with exponential input gating.  Training and
+prefill use an **exact stabilized chunkwise-parallel form** (derived from
+the recurrence; property-tested to match the step-by-step reference in
+tests/test_ssm_equivalence.py).  Decode uses the O(1)-state recurrence —
+this is why xlstm runs the `long_500k` cell that quadratic-attention archs
+must skip.
+
+sLSTM: scalar-memory cell with recurrent (block-diagonal per-head) gate
+connections — inherently sequential, implemented with lax.scan over time.
+Layout: every `slstm_every`-th block is sLSTM (paper's 7:1 mix).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.params import ParamDef
+from repro.models.transformer import BaseLM, stack_defs, remat_wrap
+from repro.sharding.rules import shard_constraint
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+
+
+def mlstm_recurrent(q, k, v, li, lf, state):
+    """Step-by-step reference (also the decode path).
+
+    q,k: (b,h,s,dk); v: (b,h,s,dv); li,lf: (b,h,s) log input/forget gates.
+    state: (C (b,h,dv,dk), n (b,h,dk), m (b,h)).  Returns (h (b,h,s,dv), state).
+    """
+    dk = q.shape[-1]
+    qs = q / math.sqrt(dk)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, lit, lft = xs
+        m_new = jnp.maximum(lft + m, lit)
+        i_p = jnp.exp(lit - m_new)[..., None]
+        f_p = jnp.exp(lft + m - m_new)[..., None]
+        C = f_p[..., None] * C + i_p[..., None] * (vt[..., :, None] * kt[..., None, :])
+        n = f_p * n + i_p * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                          jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (qs, k, v.astype(jnp.float32)))
+    xs = xs + tuple(jnp.moveaxis(t, 2, 0) for t in (li, lf))
+    state, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 2), state
+
+
+def mlstm_chunkwise(q, k, v, li, lf, state, chunk: int):
+    """Exact chunkwise-parallel mLSTM (stabilized). Shapes as above.
+    Ragged tails (s % chunk != 0) run through the recurrence."""
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    if s % chunk:
+        cut = (s // chunk) * chunk
+        if cut == 0:
+            return mlstm_recurrent(q, k, v, li, lf, state)
+        y0, state = mlstm_chunkwise(q[:, :, :cut], k[:, :, :cut], v[:, :, :cut],
+                                    li[:, :, :cut], lf[:, :, :cut], state, chunk)
+        y1, state = mlstm_recurrent(q[:, :, cut:], k[:, :, cut:], v[:, :, cut:],
+                                    li[:, :, cut:], lf[:, :, cut:], state)
+        return jnp.concatenate([y0, y1], axis=2), state
+    n_chunks = s // chunk
+    qs = (q / math.sqrt(dk)).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def resh(t, d=None):
+        shape = (b, h, n_chunks, chunk) + ((d,) if d else ())
+        return t.reshape(shape).transpose(2, 0, 1, 3, *((4,) if d else ()))
+
+    qc, kc, vc = resh(qs, dk), resh(kf, dk), resh(vf, dv)
+    lic, lfc = resh(li), resh(lf)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, xs):
+        C, n, m_prev = carry                       # (b,h,dv,dk),(b,h,dk),(b,h)
+        qi, ki, vi, lii, lfi = xs
+        a = jnp.cumsum(lfi, axis=-1)               # (b,h,Q)
+        D = a[..., :, None] - a[..., None, :] + lii[..., None, :]
+        D = jnp.where(tri, D, -jnp.inf)
+        m_intra = jnp.max(D, axis=-1)
+        m_inter = m_prev[..., None] + a
+        m_t = jnp.maximum(m_intra, m_inter)        # (b,h,Q)
+        W = jnp.exp(D - m_t[..., None])            # masked weights
+        qk = jnp.einsum("bhid,bhjd->bhij", qi, ki)
+        num = jnp.einsum("bhij,bhjv->bhiv", W * qk, vi)
+        inter = jnp.exp(m_inter - m_t)             # (b,h,Q)
+        num = num + inter[..., None] * jnp.einsum("bhqk,bhvk->bhqv", qi, C)
+        den_i = (W * qk).sum(-1) + inter * jnp.einsum("bhqk,bhk->bhq", qi, n)
+        den = jnp.maximum(jnp.abs(den_i), jnp.exp(-m_t))
+        hidden = num / den[..., None]
+        # state update to end of chunk
+        m_new = m_t[..., -1]
+        decay = jnp.exp(a[..., -1:] - a + lii - m_new[..., None])  # (b,h,Q)
+        C_new = jnp.einsum("bhj,bhjv,bhjk->bhvk", decay, vi, ki) + \
+            jnp.exp(m_prev + a[..., -1] - m_new)[..., None, None] * C
+        n_new = jnp.einsum("bhj,bhjk->bhk", decay, ki) + \
+            jnp.exp(m_prev + a[..., -1] - m_new)[..., None] * n
+        return (C_new, n_new, m_new), hidden
+
+    state, hs = jax.lax.scan(body, state, (qc, kc, vc, lic, lfc))
+    return hs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dv), state
+
+
+def mlstm_zero_state(b, h, dk, dv):
+    return (jnp.zeros((b, h, dv, dk), jnp.float32),
+            jnp.zeros((b, h, dk), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell (scalar memory, recurrent gates)
+
+
+def slstm_scan(gates_x, R, state):
+    """gates_x: (b, s, 4, h, dh) pre-activations from the input path.
+    R: (4, h, dh, dh) recurrent per-head gate weights.
+    state: (c, n, hid, m) each (b, h, dh) except m (b, h).
+    """
+
+    def step(carry, gx):
+        c, n, hid, m = carry
+        rec = jnp.einsum("ghde,bhd->gbhe", R.astype(jnp.float32),
+                         hid)                        # (4, b, h, dh)
+        gi, gf, gz, go = (gx[:, i].astype(jnp.float32) + rec[i] for i in range(4))
+        m_dim = m[..., None]
+        lf = -jax.nn.softplus(-gf)                   # log sigmoid
+        m_new = jnp.maximum(lf + m_dim, gi)
+        i_p = jnp.exp(gi - m_new)
+        f_p = jnp.exp(lf + m_dim - m_new)
+        z = jnp.tanh(gz)
+        o = jax.nn.sigmoid(go)
+        c = f_p * c + i_p * z
+        n = f_p * n + i_p
+        hid = o * c / jnp.maximum(n, 1.0)
+        return (c, n, hid, jnp.max(m_new, axis=-1)), hid
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(gates_x, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), state             # (b, s, h, dh)
+
+
+def slstm_zero_state(b, h, dh):
+    return (jnp.zeros((b, h, dh), jnp.float32), jnp.zeros((b, h, dh), jnp.float32),
+            jnp.zeros((b, h, dh), jnp.float32), jnp.full((b, h), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (width w) with streaming state
+
+
+def causal_conv(x, w, state=None):
+    """x: (b, s, d); w: (width, d). state: (b, width-1, d) trailing inputs.
+    Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[width - 1 - i] for i in range(width))
+    return y, xp[:, -(width - 1):, :]
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+
+
+def mlstm_block_defs(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    h = cfg.ssm_heads
+    dqk, dv = cfg.ssm_head_dim, di // h
+    return {
+        "ln": L.norm_defs(d, cfg.norm),
+        "w_up": ParamDef((d, 2 * di), ("embed", "mlp")),
+        "conv_w": ParamDef((cfg.conv_width, di), ("conv", "mlp")),
+        # block-diagonal per-head projections (xLSTM paper): each head
+        # projects its own di/h slice
+        "wq": ParamDef((h, dv, dqk), ("heads", "head_dim", None)),
+        "wk": ParamDef((h, dv, dqk), ("heads", "head_dim", None)),
+        "wv": ParamDef((h, dv, dv), ("heads", "head_dim", None)),
+        "w_if": ParamDef((di, 2, h), ("mlp", None, "heads"), init="zeros"),
+        "b_if": ParamDef((2, h), (None, "heads"), init="zeros"),
+        "gn": ParamDef((h, dv), ("heads", "head_dim"), init="ones"),
+        "w_down": ParamDef((di, d), ("mlp", "embed")),
+    }
+
+
+def slstm_block_defs(cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.ssm_heads
+    dh = d // h
+    ff = int(d * 4 / 3 / 64 + 1) * 64
+    return {
+        "ln": L.norm_defs(d, cfg.norm),
+        "wx": ParamDef((d, 4, h, dh), ("embed", None, "heads", "head_dim")),
+        "r": ParamDef((4, h, dh, dh), (None, "heads", "head_dim", None),
+                      init="normal", scale=0.05),
+        "gn": ParamDef((h, dh), ("heads", "head_dim"), init="ones"),
+        "ln_ffn": L.norm_defs(d, cfg.norm),
+        "ffn_wi": ParamDef((d, ff), ("embed", "mlp")),
+        "ffn_wg": ParamDef((d, ff), ("embed", "mlp")),
+        "ffn_wo": ParamDef((ff, d), ("mlp", "embed")),
+    }
+
+
+def _groupnorm(x, scale):
+    """x: (b, s, h, dv) normalized per head."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    return (xf - mu) * jax.lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)
+
+
+def mlstm_block_apply(p, x, cfg, mesh, mode, cache, chunk):
+    b, s, d = x.shape
+    h = cfg.ssm_heads
+    di = cfg.ssm_expand * d
+    dv = di // h
+    res = x
+    xin = L.apply_norm(p["ln"], x, cfg.norm)
+    up = jnp.einsum("bsd,de->bse", xin, p["w_up"])
+    xb, z = jnp.split(up, 2, axis=-1)
+    conv_state = cache.get("conv") if cache else None
+    xc, new_conv = causal_conv(xb, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    xch = xc.reshape(b, s, h, dv)   # per-head slices (block-diagonal proj)
+    xbh = xb.reshape(b, s, h, dv)
+    q = jnp.einsum("bshc,hck->bhsk", xch, p["wq"])
+    k = jnp.einsum("bshc,hck->bhsk", xch, p["wk"])
+    v = jnp.einsum("bshc,hck->bhsk", xbh, p["wv"])
+    gates = jnp.einsum("bsd,dgh->bsgh", xc, p["w_if"]) + p["b_if"].astype(jnp.float32)
+    li = gates[:, :, 0].transpose(0, 2, 1).astype(jnp.float32)      # (b,h,s)
+    lf = -jax.nn.softplus(-gates[:, :, 1]).transpose(0, 2, 1).astype(jnp.float32)
+
+    if cache is not None:
+        state = (cache["C"], cache["n"], cache["m"])
+    else:
+        state = mlstm_zero_state(b, h, cfg.ssm_head_dim, dv)
+    if mode == "decode":
+        hidden, state = mlstm_recurrent(q, k, v, li, lf, state)
+    else:
+        hidden, state = mlstm_chunkwise(q, k, v, li, lf, state,
+                                        min(chunk, s))
+    hidden = hidden.transpose(0, 2, 1, 3)                            # (b,s,h,dv)
+    hidden = _groupnorm(hidden, p["gn"]).reshape(b, s, di)
+    out = (hidden * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", out, p["w_down"])
+    y = shard_constraint(y, ("act_batch", "act_seq", "act_embed"), mesh)
+    new_cache = {"C": state[0], "n": state[1], "m": state[2], "conv": new_conv}
+    return res + y, new_cache
+
+
+def slstm_block_apply(p, x, cfg, mesh, mode, cache):
+    b, s, d = x.shape
+    h = cfg.ssm_heads
+    dh = d // h
+    res = x
+    xin = L.apply_norm(p["ln"], x, cfg.norm)
+    gx = jnp.einsum("bsd,dghe->bsghe", xin, p["wx"])                 # (b,s,4,h,dh)
+    # perf iteration I7: replicate the (tiny) recurrence across the data
+    # axis.  With batch-sharded states, AD all-reduces dR (the recurrent
+    # weight cotangent, ~17 MB) EVERY timestep x every microbatch — 12.6 TB
+    # of wire for xlstm train_4k.  Replicated compute costs ~+1% FLOPs and
+    # keeps dR local until the single post-loop reduction.
+    state = (cache["c"], cache["n"], cache["h"], cache["m"]) if cache else \
+        slstm_zero_state(b, h, dh)
+    if mesh is not None and s > 1:
+        gx = shard_constraint(gx, (None, None, None, None, None), mesh)
+        # states must be replicated too, or the bwd carry re-shards and the
+        # dR all-reduce reappears (measured: it2)
+        state = tuple(
+            shard_constraint(t, (None,) * t.ndim, mesh) for t in state)
+    hs, state = slstm_scan(gx, p["r"], state)
+    if mesh is not None and s > 1:
+        # pin hs (and thus its cotangent) REPLICATED: a batch-sharded
+        # cotangent entering the backward time loop re-introduces the
+        # per-timestep dR all-reduce (measured in it3); the price is one
+        # all-gather per group scan instead of 4096 ARs.
+        hs = shard_constraint(hs, (None,) * hs.ndim, mesh)
+    hs = _groupnorm(hs, p["gn"]).reshape(b, s, d).astype(x.dtype)
+    x = res + hs
+    # gated FFN
+    hin = L.apply_norm(p["ln_ffn"], x, cfg.norm)
+    f = jax.nn.silu(jnp.einsum("bsd,df->bsf", hin, p["ffn_wg"])) * \
+        jnp.einsum("bsd,df->bsf", hin, p["ffn_wi"])
+    y = jnp.einsum("bsf,fd->bsd", f, p["ffn_wo"])
+    new_cache = {"c": state[0], "n": state[1], "h": state[2], "m": state[3]}
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+
+
+class XLSTM(BaseLM):
+    """48 blocks in groups of `slstm_every`: (k-1) mLSTM + 1 sLSTM."""
+
+    def _layout(self):
+        cfg = self.cfg
+        k = cfg.slstm_every
+        assert cfg.num_layers % k == 0
+        groups = cfg.num_layers // k
+        return groups, k - 1  # groups, mlstm per group
+
+    def param_table(self) -> dict:
+        cfg = self.cfg
+        groups, m_per = self._layout()
+        return {
+            "embed": L.embed_defs(cfg),
+            "mlstm": stack_defs(stack_defs(mlstm_block_defs(cfg), m_per), groups),
+            "slstm": stack_defs(slstm_block_defs(cfg), groups),
+            "ln_f": L.norm_defs(cfg.d_model, cfg.norm),
+        }
+
+    def cache_table(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        groups, m_per = self._layout()
+        h = cfg.ssm_heads
+        di = cfg.ssm_expand * cfg.d_model
+        dv, dk, dh = di // h, cfg.ssm_head_dim, cfg.d_model // h
+        f32 = jnp.float32
+
+        def m_def(shape, axes):
+            return ParamDef((groups, m_per) + shape, ("layers", "layers") + axes,
+                            f32, "zeros")
+
+        def s_def(shape, axes, dtype=f32):
+            return ParamDef((groups,) + shape, ("layers",) + axes, dtype, "zeros")
+
+        return {
+            "mlstm": {
+                "C": m_def((batch, h, dv, dk), ("act_batch", "act_heads", None, None)),
+                "n": m_def((batch, h, dk), ("act_batch", "act_heads", None)),
+                "m": m_def((batch, h), ("act_batch", "act_heads")),
+                "conv": ParamDef((groups, m_per, batch, cfg.conv_width - 1, di),
+                                 ("layers", "layers", "act_batch", None, "act_mlp"),
+                                 cfg.activation_dtype, "zeros"),
+            },
+            "slstm": {
+                "c": s_def((batch, h, dh), ("act_batch", "act_heads", None)),
+                "n": s_def((batch, h, dh), ("act_batch", "act_heads", None)),
+                "h": s_def((batch, h, dh), ("act_batch", "act_heads", None)),
+                "m": s_def((batch, h), ("act_batch", "act_heads")),
+            },
+            "index": ParamDef((), (), jnp.int32, "zeros"),
+        }
+
+    def backbone(self, params, x, mesh, mode, cache=None):
+        cfg = self.cfg
+        groups, m_per = self._layout()
+        chunk = cfg.ssm_chunk
+        use_cache = cache is not None
+
+        def group_body(carry, xs):
+            y = carry
+            mp, sp, mc, sc = xs
+
+            def m_body(yy, xs2):
+                bp, c = xs2
+                out, nc = mlstm_block_apply(bp, yy, cfg, mesh, mode, c, chunk)
+                return out, nc
+
+            m_fn = remat_wrap(m_body, self.remat) if mode == "full" else m_body
+            y, new_mc = jax.lax.scan(m_fn, y, (mp, mc))
+            # sLSTM must be rematted too (it6): unchecked, its 4096-step
+            # scan saves stacked f32 residuals (~2 GB x several per group)
+            s_fn = slstm_block_apply
+            if mode == "full":
+                s_fn = remat_wrap(
+                    lambda p_, y_: slstm_block_apply(p_, y_, cfg, mesh,
+                                                     "full", None)[0],
+                    self.remat)
+                y = s_fn(sp, y)
+                new_sc = sc
+            else:
+                y, new_sc = slstm_block_apply(sp, y, cfg, mesh, mode, sc)
+            return y, (new_mc, new_sc)
+
+        if use_cache:
+            mcache = {k: v for k, v in cache["mlstm"].items()}
+            scache = {k: v for k, v in cache["slstm"].items()}
+        else:
+            mcache = jax.tree.map(
+                lambda d: jnp.zeros((groups, m_per) + (0,), jnp.float32), {})
+            # build fresh zero caches so scan carries a uniform structure
+            b = x.shape[0]
+            tbl = self.cache_table(b, 0)
+            from repro.models.params import init_params
+            zeros = init_params(tbl, jax.random.PRNGKey(0))
+            mcache, scache = zeros["mlstm"], zeros["slstm"]
+
+        x, (new_m, new_s) = jax.lax.scan(
+            group_body, x, (params["mlstm"], params["slstm"], mcache, scache))
+        new_cache = None
+        if use_cache:
+            new_cache = {"mlstm": new_m, "slstm": new_s,
+                         "index": cache["index"] + x.shape[1]}
+        return x, new_cache
+
+    def loss(self, params, batch, mesh):
+        cfg = self.cfg
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = L.embed(params["embed"], batch["tokens"], cfg, mesh, positions=positions)
+        x, _ = self.backbone(params, x, mesh, "full")
+        x = L.apply_norm(params["ln_f"], x, cfg.norm)
+        logits = L.unembed(params["embed"], x, cfg, mesh)
+        loss = L.softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+        return loss, {"loss": loss}
+
+    def prefill(self, params, batch, mesh):
+        cfg = self.cfg
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = L.embed(params["embed"], batch["tokens"], cfg, mesh, positions=positions)
+        from repro.models.params import init_params
+        cache = init_params(self.cache_table(b, 0), jax.random.PRNGKey(0))
+        x, cache = self.backbone(params, x, mesh, "prefill", cache)
+        x = L.apply_norm(params["ln_f"], x[:, -1:], cfg.norm)
+        return L.unembed(params["embed"], x, cfg, mesh), cache
+
+    def decode_step(self, params, cache, tokens, mesh):
+        cfg = self.cfg
+        b, s = tokens.shape
+        positions = cache["index"] + jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = L.embed(params["embed"], tokens, cfg, mesh, positions=positions)
+        x, cache = self.backbone(params, x, mesh, "decode", cache)
+        x = L.apply_norm(params["ln_f"], x, cfg.norm)
+        return L.unembed(params["embed"], x, cfg, mesh), cache

@@ -1,0 +1,236 @@
+"""Decoder-only transformer LM (dense family) + the generic LM interface.
+
+All families implement ``BaseLM``:
+
+    param_table()                  declarative weights (ParamDef tree)
+    batch_table(shape)             declarative inputs for a ShapeConfig
+    cache_table(batch, max_len)    declarative decode state
+    loss(params, batch, mesh)      training loss (mode='full' forward)
+    prefill(params, batch, mesh)   build cache + last-position logits
+    decode_step(params, cache, tokens, mesh)
+
+Layers are stacked with ``lax.scan`` (compile time on deep models) and
+wrapped in ``jax.checkpoint`` per the deployment plan's remat policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models.params import ParamDef, _map_table
+from repro.sharding.rules import shard_constraint
+
+
+def remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if policy == "full":
+        return jax.checkpoint(fn)
+    raise ValueError(policy)
+
+
+def stack_defs(defs: dict, n: int) -> dict:
+    """Prepend a scanned 'layers' dimension to every ParamDef in a tree."""
+    return _map_table(
+        defs,
+        lambda d: dataclasses.replace(
+            d, shape=(n,) + d.shape, logical_axes=("layers",) + d.logical_axes),
+    )
+
+
+class BaseLM:
+    def __init__(self, cfg: ModelConfig, remat: str = "dots"):
+        self.cfg = cfg
+        self.remat = remat
+
+    # -- declarative tables ------------------------------------------------
+    def param_table(self) -> dict:
+        raise NotImplementedError
+
+    def batch_table(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {
+                "tokens": ParamDef((b, s), ("act_batch", "act_seq"), jnp.int32, "zeros"),
+                "labels": ParamDef((b, s), ("act_batch", "act_seq"), jnp.int32, "zeros"),
+            }
+        if shape.kind == "prefill":
+            return {"tokens": ParamDef((b, s), ("act_batch", "act_seq"), jnp.int32, "zeros")}
+        # decode: one new token against a cache of length seq_len
+        return {"tokens": ParamDef((b, 1), ("act_batch", None), jnp.int32, "zeros")}
+
+    def cache_table(self, batch: int, max_len: int) -> dict:
+        raise NotImplementedError
+
+    # -- compute -----------------------------------------------------------
+    def loss(self, params, batch, mesh):
+        raise NotImplementedError
+
+    def prefill(self, params, batch, mesh):
+        raise NotImplementedError
+
+    def decode_step(self, params, cache, tokens, mesh):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+
+
+class DenseLM(BaseLM):
+    """Llama/Mistral/Nemotron/StableLM-style decoder; also the VLM backbone."""
+
+    # ---- tables ----
+    def block_defs(self) -> dict:
+        cfg = self.cfg
+        d = {"ln1": L.norm_defs(cfg.d_model, cfg.norm),
+             "attn": L.attention_defs(cfg),
+             "ln2": L.norm_defs(cfg.d_model, cfg.norm),
+             "mlp": self.mlp_defs()}
+        return d
+
+    def mlp_defs(self) -> dict:
+        return L.mlp_defs(self.cfg)
+
+    def param_table(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": L.embed_defs(cfg),
+            "blocks": stack_defs(self.block_defs(), cfg.num_layers),
+            "ln_f": L.norm_defs(cfg.d_model, cfg.norm),
+        }
+
+    def cache_table(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        kv = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+        ax = ("layers", "act_batch", "act_seq", "act_kv_heads", None)
+        return {"k": ParamDef(kv, ax, cfg.activation_dtype, "zeros"),
+                "v": ParamDef(kv, ax, cfg.activation_dtype, "zeros"),
+                "index": ParamDef((), (), jnp.int32, "zeros")}
+
+    # ---- block ----
+    def block_apply(self, p, x, mesh, positions, mode, cache):
+        cfg = self.cfg
+        h = L.apply_norm(p["ln1"], x, cfg.norm)
+        window = cfg.window or None
+        attn_out, new_cache = L.attention(
+            p["attn"], h, cfg, mesh, positions=positions, mode=mode,
+            cache=cache, window=window)
+        x = x + attn_out
+        h = L.apply_norm(p["ln2"], x, cfg.norm)
+        x = x + self.mlp_apply(p["mlp"], h, mesh)
+        return x, new_cache
+
+    def mlp_apply(self, p, h, mesh):
+        return L.mlp(p, h, self.cfg, mesh)
+
+    # ---- backbone over scanned layers ----
+    def backbone(self, params, x, positions, mesh, mode, cache=None):
+        blocks = params["blocks"]
+        if mode == "full":
+            fn = remat_wrap(
+                lambda bp, y: self.block_apply(bp, y, mesh, positions, "full", None)[0],
+                self.remat)
+
+            def body(carry, bp):
+                return fn(bp, carry), None
+
+            x, _ = jax.lax.scan(body, x, blocks)
+            return x, None
+
+        # prefill / decode: per-layer cache travels as scan xs -> ys
+        index = cache["index"] if cache is not None else None
+
+        def body(carry, xs):
+            bp, c = xs
+            y, nc = self.block_apply(bp, carry, mesh, positions, mode, c)
+            return y, nc
+
+        layer_caches = None
+        if mode == "decode":
+            layer_caches = {"k": cache["k"], "v": cache["v"],
+                            "index": jnp.broadcast_to(index, (self.cfg.num_layers,))}
+        else:  # prefill: caches created inside
+            layer_caches = None
+
+        if mode == "decode":
+            def body_d(carry, xs):
+                bp, ck, cv, ci = xs
+                y, nc = self.block_apply(bp, carry, mesh, positions, "decode",
+                                         {"k": ck, "v": cv, "index": ci})
+                return y, (nc["k"], nc["v"])
+
+            x, (nk, nv) = jax.lax.scan(
+                body_d, x, (blocks, cache["k"], cache["v"],
+                            jnp.broadcast_to(index, (self.cfg.num_layers,))))
+            new_cache = {"k": nk, "v": nv, "index": index + x.shape[1]}
+            return x, new_cache
+
+        # prefill
+        def body_p(carry, bp):
+            y, nc = self.block_apply(bp, carry, mesh, positions, "prefill", None)
+            return y, (nc["k"], nc["v"]) if nc is not None else None
+
+        x, kvs = jax.lax.scan(body_p, x, blocks)
+        new_cache = {"k": kvs[0], "v": kvs[1],
+                     "index": jnp.asarray(x.shape[1], jnp.int32)}
+        return x, new_cache
+
+    # ---- entry points ----
+    def embed_inputs(self, params, batch, mesh, positions):
+        return L.embed(params["embed"], batch["tokens"], self.cfg, mesh,
+                       positions=positions)
+
+    def logits_from(self, params, x, mesh):
+        x = L.apply_norm(params["ln_f"], x, self.cfg.norm)
+        return L.unembed(params["embed"], x, self.cfg, mesh)
+
+    def loss(self, params, batch, mesh):
+        cfg = self.cfg
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = self.embed_inputs(params, batch, mesh, positions)
+        x, _ = self.backbone(params, x, positions, mesh, "full")
+        logits = self.logits_from(params, x, mesh)
+        loss = L.softmax_xent(logits, batch["labels"],
+                              batch.get("loss_mask"))
+        return loss, {"loss": loss}
+
+    def prefill(self, params, batch, mesh):
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = self.embed_inputs(params, batch, mesh, positions)
+        x, cache = self.backbone(params, x, positions, mesh, "prefill")
+        logits = self.logits_from(params, x[:, -1:], mesh)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, mesh):
+        b, s = tokens.shape
+        positions = cache["index"] + jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = L.embed(params["embed"], tokens, self.cfg, mesh, positions=positions)
+        x, new_cache = self.backbone(params, x, positions, mesh, "decode",
+                                     cache=cache)
+        logits = self.logits_from(params, x, mesh)
+        return logits, new_cache
+
+
+def model_for(cfg: ModelConfig, remat: str = "dots") -> BaseLM:
+    from repro.models.moe import MoELM
+    from repro.models.ssm import XLSTM
+    from repro.models.mamba import ZambaHybrid
+    from repro.models.encdec import EncDecLM
+    from repro.models.vlm import VLM
+
+    cls = {"dense": DenseLM, "moe": MoELM, "ssm_xlstm": XLSTM,
+           "hybrid_mamba": ZambaHybrid, "encdec": EncDecLM, "vlm": VLM}[cfg.family]
+    return cls(cfg, remat=remat)

@@ -1,0 +1,71 @@
+"""LLaVA-NeXT-style VLM — arch `llava-next-34b`.
+
+Assignment specifies the transformer BACKBONE only; the vision tower and
+anyres tiling are a STUB: ``batch_table`` takes precomputed patch
+embeddings (b, num_patches, d_model) which are prepended to the token
+embeddings.  The total backbone sequence equals the assigned seq_len
+(first `num_patches` positions are image, the rest text); the loss is
+masked to text positions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeConfig
+from repro.models import layers as L
+from repro.models.params import ParamDef
+from repro.models.transformer import DenseLM
+from repro.sharding.rules import shard_constraint
+
+
+class VLM(DenseLM):
+    def batch_table(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        P = cfg.num_patches
+        if shape.kind == "decode":
+            return {"tokens": ParamDef((b, 1), ("act_batch", None), jnp.int32, "zeros")}
+        text = s - P
+        assert text > 0, (s, P)
+        base = {
+            "patch_embeds": ParamDef((b, P, cfg.d_model),
+                                     ("act_batch", None, "act_embed"),
+                                     cfg.activation_dtype, "zeros"),
+            "tokens": ParamDef((b, text), ("act_batch", "act_seq"), jnp.int32, "zeros"),
+        }
+        if shape.kind == "train":
+            base["labels"] = ParamDef((b, text), ("act_batch", "act_seq"),
+                                      jnp.int32, "zeros")
+        return base
+
+    def embed_inputs(self, params, batch, mesh, positions):
+        cfg = self.cfg
+        tok = L.embed(params["embed"], batch["tokens"], cfg, mesh,
+                      positions=positions[:, batch["patch_embeds"].shape[1]:])
+        x = jnp.concatenate(
+            [batch["patch_embeds"].astype(tok.dtype), tok], axis=1)
+        return shard_constraint(x, ("act_batch", "act_seq", "act_embed"), mesh)
+
+    def loss(self, params, batch, mesh):
+        cfg = self.cfg
+        b = batch["tokens"].shape[0]
+        P = cfg.num_patches
+        s = P + batch["tokens"].shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = self.embed_inputs(params, batch, mesh, positions)
+        x, _ = self.backbone(params, x, positions, mesh, "full")
+        # only text positions contribute to the loss
+        logits = self.logits_from(params, x[:, P:], mesh)
+        loss = L.softmax_xent(logits, batch["labels"])
+        return loss, {"loss": loss}
+
+    def prefill(self, params, batch, mesh):
+        cfg = self.cfg
+        b = batch["tokens"].shape[0]
+        s = cfg.num_patches + batch["tokens"].shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = self.embed_inputs(params, batch, mesh, positions)
+        x, cache = self.backbone(params, x, positions, mesh, "prefill")
+        logits = self.logits_from(params, x[:, -1:], mesh)
+        return logits, cache

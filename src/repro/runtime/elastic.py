@@ -1,0 +1,42 @@
+"""Elastic scaling: re-mesh after node loss and continue training.
+
+Checkpoints are mesh-agnostic (full host arrays), so elasticity is:
+
+    detect loss -> rebuild mesh without the lost data slice(s)
+    -> re-derive shardings via the SAME rules engine (divisibility
+       fallback absorbs the smaller axis) -> device_put -> resume.
+
+The "pod" axis of the multi-pod mesh is pure DP, so losing a whole pod
+degrades to the single-pod mesh with NO TP-state resharding — that is a
+deliberate design decision recorded in DESIGN.md §7/§8.
+
+The global batch is preserved by rebalancing per-replica batch (the
+deterministic pipeline is keyed by global step, so data order is stable
+across the transition).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.params import partition_specs
+from repro.sharding.rules import DEFAULT_RULES
+
+
+def reshard_state(state, state_table, new_mesh, rules=None,
+                  fallbacks: list | None = None):
+    """Place a host-restored state onto a (possibly degraded) mesh."""
+    rules = rules or DEFAULT_RULES
+    specs = partition_specs(state_table, new_mesh, rules,
+                            [] if fallbacks is None else fallbacks)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, specs)
+
+
+def rebalance_batch_size(global_batch: int, old_data: int, new_data: int) -> int:
+    """Keep the global batch; per-replica batch grows on the survivors.
+    Returns the new per-replica batch (must divide evenly)."""
+    if global_batch % new_data:
+        # shrink to the largest divisible global batch (logged by caller)
+        global_batch = (global_batch // new_data) * new_data
+    return global_batch // new_data

@@ -1,0 +1,176 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+This is the sharding half of the EASEY AutoTuner (paper §2.1): a portable
+model declares *logical* axis names on every parameter / activation
+dimension, and the deployment layer maps them onto the *target* mesh.  The
+mapping is target-dependent (the paper's ``###includelocalmpi###`` idea):
+the same AppSpec deploys onto a 16x16 single pod, a 2x16x16 multi-pod or a
+1-device debug CPU mesh, and the rules engine silently drops mesh axes that
+do not divide the concrete dimension (e.g. 8 KV heads on a 16-way model
+axis fall back to replication), recording every fallback for the tuning
+report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis vocabulary.
+#   parameters:  "embed", "mlp", "heads", "kv_heads", "head_dim", "vocab",
+#                "experts", "layers", "conv", "state"
+#   activations: "act_batch", "act_seq", "act_embed", "act_heads",
+#                "act_kv_heads", "act_vocab", "act_experts"
+LOGICAL_AXES = (
+    "embed", "mlp", "heads", "kv_heads", "head_dim", "vocab", "experts",
+    "layers", "conv", "state", "vocab_in", "embed_feat",
+    "act_batch", "act_seq", "act_embed", "act_heads", "act_kv_heads",
+    "act_vocab", "act_experts", "act_state", "act_mlp",
+    # LULESH / stencil domain axes
+    "grid_x", "grid_y", "grid_z", "act_grid_x", "act_grid_y", "act_grid_z",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping logical axis -> tuple of candidate mesh axes (priority order).
+
+    Each logical axis may list several mesh axes; they are applied jointly
+    (PartitionSpec tuple entry) when all of them divide the dimension and
+    none has been consumed by an earlier dimension of the same spec.
+    """
+
+    rules: Mapping[str, tuple[str, ...]]
+
+    def get(self, logical: str | None) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        return tuple(self.rules.get(logical, ()))
+
+    def replace(self, **updates: tuple[str, ...]) -> "AxisRules":
+        merged = dict(self.rules)
+        merged.update(updates)
+        return AxisRules(rules=merged)
+
+
+# Baseline rules for the production meshes ("pod", "data", "model").
+# FSDP: parameter "embed" dim over the data axis (ZeRO-3 storage sharding);
+# TP: "mlp"/"heads"/"vocab" over the model axis; DP: batch over (pod, data).
+DEFAULT_RULES = AxisRules(rules={
+    "embed": ("data",),
+    "vocab_in": (),            # input embedding: vocab replicated (I3)
+    "embed_feat": ("model",),  # input embedding: features TP-sharded (I3)
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "layers": (),
+    "conv": (),
+    "state": (),
+    "act_batch": ("pod", "data"),
+    "act_seq": (),
+    "act_embed": (),
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "act_vocab": ("model",),
+    "act_experts": ("model",),
+    "act_state": (),
+    "act_mlp": ("model",),
+    "grid_x": ("data",),
+    "grid_y": ("model",),
+    "grid_z": (),
+    "act_grid_x": ("data",),
+    "act_grid_y": ("model",),
+    "act_grid_z": (),
+})
+
+# Sequence-parallel variant: long activations sharded along the model axis.
+SEQUENCE_PARALLEL_RULES = DEFAULT_RULES.replace(
+    act_seq=("model",),
+    act_heads=(),
+    act_kv_heads=(),
+)
+
+# Decode-cache variant (perf iteration I1, EXPERIMENTS.md §Perf): when
+# num_kv_heads doesn't divide the model axis the default rules replicate
+# the KV cache 16x; sharding the cache SEQUENCE axis instead distributes
+# it and turns decode attention into a ring/flash-decode pattern (partial
+# softmax + small all-reduces).
+DECODE_SEQ_CACHE_RULES = DEFAULT_RULES.replace(
+    act_seq=("model",),
+    act_kv_heads=(),
+    act_heads=(),
+)
+
+
+def logical_to_spec(
+    logical_axes: Sequence[str | None],
+    dim_sizes: Sequence[int],
+    mesh: Mesh,
+    rules: AxisRules,
+    fallbacks: list[str] | None = None,
+) -> P:
+    """Translate per-dimension logical axes into a PartitionSpec.
+
+    A mesh axis is used on a dimension only if (a) it exists on the mesh,
+    (b) it has not been consumed by an earlier dimension of this spec, and
+    (c) the product of chosen axis sizes divides the dimension size.  Axes
+    failing (c) are dropped (replication fallback) and reported.
+    """
+    if len(logical_axes) != len(dim_sizes):
+        raise ValueError(
+            f"logical axes {logical_axes} do not match rank {len(dim_sizes)}")
+    used: set[str] = set()
+    entries: list = []
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for logical, dim in zip(logical_axes, dim_sizes):
+        chosen: list[str] = []
+        prod = 1
+        for mesh_axis in rules.get(logical):
+            if mesh_axis not in axis_sizes or mesh_axis in used:
+                continue
+            nxt = prod * axis_sizes[mesh_axis]
+            if dim % nxt == 0:
+                chosen.append(mesh_axis)
+                prod = nxt
+            elif fallbacks is not None:
+                fallbacks.append(
+                    f"{logical}:{mesh_axis} dropped (dim {dim} % {nxt} != 0)")
+        used.update(chosen)
+        if not chosen:
+            entries.append(None)
+        elif len(chosen) == 1:
+            entries.append(chosen[0])
+        else:
+            entries.append(tuple(chosen))
+    return P(*entries)
+
+
+def spec_for(
+    logical_axes: Sequence[str | None],
+    dim_sizes: Sequence[int],
+    mesh: Mesh,
+    rules: AxisRules | None = None,
+) -> NamedSharding:
+    rules = rules or DEFAULT_RULES
+    return NamedSharding(mesh, logical_to_spec(logical_axes, dim_sizes, mesh, rules))
+
+
+def shard_constraint(x: jax.Array, logical_axes: Sequence[str | None],
+                     mesh: Mesh | None, rules: AxisRules | None = None):
+    """with_sharding_constraint by logical axes; no-op off-mesh.
+
+    Used inside model code so the same definition runs on a laptop (mesh is
+    None -> identity) and on the production mesh (constraint applied).
+    """
+    if mesh is None or math.prod(mesh.devices.shape) == 1:
+        return x
+    rules = rules or DEFAULT_RULES
+    spec = logical_to_spec(logical_axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,142 @@
+"""Step builders: train (grad-accumulation scan), prefill, decode.
+
+``build_train_step`` assembles the full training step from a model, an
+optimizer and a DeploymentPlan: microbatch scan (gradient accumulation),
+optional error-feedback int8 gradient compression, LR schedule, optimizer
+update.  The returned function is pure and jit/pjit-able; the EASEY
+BuildService owns jit+sharding+donation.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import DeploymentPlan
+from repro.optim.schedule import warmup_cosine
+
+
+def _accum_dtype(plan):
+    return jnp.bfloat16 if plan.grad_accum_dtype == "bfloat16" else jnp.float32
+
+
+def _ef_int8(g, err):
+    """Error-feedback int8 quantization of a gradient contribution — models
+    compressed cross-replica reduction (wire bytes /4 vs fp32)."""
+    x = g.astype(jnp.float32) + err
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    deq = q * scale
+    return deq, (x - deq)
+
+
+def build_train_step(model, opt, plan: DeploymentPlan, mesh=None,
+                     peak_lr: float = 3e-4, warmup_steps: int = 100,
+                     total_steps: int = 10_000, param_specs=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", "ef" (optional), "step"}.
+    param_specs: optional NamedSharding tree for the params — used to pin
+    the gradient-accumulation scan carry (perf iteration I6: an
+    unconstrained carry is materialized REPLICATED by XLA, turning the
+    per-microbatch gradient reduction into full all-reduces and blowing
+    fp32 grad buffers up by the data-axis factor).
+    """
+    M = plan.microbatches
+    use_ef = plan.grad_compression == "ef_int8"
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb, mesh)
+
+    def _pin(gtree):
+        if param_specs is None:
+            return gtree
+        return jax.tree.map(jax.lax.with_sharding_constraint, gtree,
+                            param_specs)
+
+    def train_step(state, batch):
+        params = state["params"]
+        acc_dt = _accum_dtype(plan)
+
+        if M == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = _pin(grads)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % M == 0, (b, M)
+                return x.reshape(M, b // M, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            g0 = _pin(jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt),
+                                   params))
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                gsum = _pin(jax.tree.map(
+                    lambda a, b_: a + b_.astype(acc_dt), gsum, g))
+                return (gsum, lsum + l), None
+
+            (gacc, lsum), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: (g / M).astype(jnp.float32), gacc)
+            loss = lsum / M
+            metrics = {"loss": loss}
+
+        if use_ef:
+            pairs = jax.tree.map(_ef_int8, grads, state["ef"])
+            grads = jax.tree.map(lambda pr: pr[0], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+            new_ef = jax.tree.map(lambda pr: pr[1], pairs,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+
+        lr = warmup_cosine(state["step"], peak_lr=peak_lr,
+                           warmup_steps=warmup_steps, total_steps=total_steps)
+        new_params, new_opt, opt_metrics = opt.update(
+            grads, state["opt"], params, lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if use_ef:
+            new_state["ef"] = new_ef
+        metrics = dict(metrics, lr=lr, **opt_metrics)
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(model, opt, params, plan: DeploymentPlan):
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if plan.grad_compression == "ef_int8":
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def train_state_table(model, opt, plan: DeploymentPlan):
+    """Declarative (ParamDef) state table — dry-run path, no allocation."""
+    from repro.models.params import ParamDef, _map_table
+    import dataclasses as dc
+    ptable = model.param_table()
+    t = {"params": ptable, "opt": opt.state_table(ptable),
+         "step": ParamDef((), (), jnp.int32, "zeros")}
+    if plan.grad_compression == "ef_int8":
+        t["ef"] = _map_table(ptable, lambda d: dc.replace(
+            d, dtype=jnp.float32, init="zeros"))
+    return t
+
+
+def build_prefill_step(model, mesh=None):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, mesh)
+    return prefill_step
+
+
+def build_decode_step(model, mesh=None):
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, mesh)
+    return decode_step

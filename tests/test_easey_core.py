@@ -1,0 +1,170 @@
+"""EASEY core: Appfile, JobSpec (paper §3), batch synthesis (Alg. 1),
+package integrity, middleware staging, job state machine, tuner."""
+
+import json
+import tarfile
+
+import pytest
+
+from repro.core.appspec import AppSpec, parse_appfile
+from repro.core.batch import make_batch, pbs_batch, slurm_batch
+from repro.core.jobs import Job, JobState, LocalScheduler
+from repro.core.jobspec import lulesh_example, parse_jobspec
+from repro.core.target import get_target
+from repro.core.tuning import tune
+from repro.configs import SHAPES, get_config
+
+
+# ---------------------------------------------------------------- Appfile
+
+APPFILE = """\
+FROM arch:deepseek-7b
+SHAPE train_4k
+###include_local_kernels###
+###include_local_collectives###
+RUN train --steps 50
+"""
+
+
+def test_appfile_roundtrip():
+    spec = parse_appfile(APPFILE)
+    assert spec.arch == "deepseek-7b"
+    assert spec.shape == "train_4k"
+    assert spec.run == "train --steps 50"
+    spec2 = parse_appfile(spec.to_appfile())
+    assert spec2.arch == spec.arch and spec2.shape == spec.shape
+
+
+def test_appfile_rejects_unknown_directive():
+    with pytest.raises(ValueError, match="unknown directive"):
+        parse_appfile("FROM arch:deepseek-7b\nSHAPE train_4k\n###bogus###\n")
+
+
+def test_appfile_accepts_paper_mpi_hook():
+    spec = parse_appfile(
+        "FROM arch:deepseek-7b\nSHAPE train_4k\n###includelocalmpi###\n")
+    assert "###includelocalmpi###" in spec.directives
+
+
+def test_appspec_hash_stable():
+    a = AppSpec("deepseek-7b", "train_4k")
+    b = AppSpec("deepseek-7b", "train_4k")
+    assert a.content_hash() == b.content_hash()
+    c = AppSpec("deepseek-7b", "decode_32k")
+    assert a.content_hash() != c.content_hash()
+
+
+# ---------------------------------------------------------------- JobSpec
+
+def test_lulesh_listing_1_5_parses():
+    spec = parse_jobspec(lulesh_example())
+    assert spec.name == "lulesh_dash"
+    assert spec.deployment.nodes == 46
+    assert spec.deployment.tasks_per_node == 48
+    assert spec.deployment.clocktime == "06:00:00"
+    assert spec.executions[0].kind == "mpi"
+    assert spec.executions[0].mpi_tasks == 2197  # 13^3 cores, paper Table 1
+    assert "lulesh.dash -i 1000 -s 13" in spec.executions[0].command
+
+
+def test_jobspec_id_hash_on_submission():
+    spec = parse_jobspec({"job": {"name": "j"}})
+    assert spec.job_id == ""
+    jid = spec.ensure_id()
+    assert len(jid) == 12 and spec.ensure_id() == jid
+
+
+def test_gridftp_planned_next_release():
+    with pytest.raises(NotImplementedError, match="next release"):
+        parse_jobspec({"job": {"name": "x"}, "data": {"input": [
+            {"source": "gsiftp://x/y", "protocol": "gridftp"}]}})
+
+
+# ------------------------------------------------------------- batch files
+
+def test_slurm_batch_golden():
+    spec = parse_jobspec(lulesh_example())
+    text = slurm_batch(spec, workdir="/scratch/j1")
+    assert "#SBATCH --job-name=lulesh_dash" in text
+    assert "#SBATCH --nodes=46" in text
+    assert "#SBATCH --ntasks-per-node=48" in text
+    assert "#SBATCH --time=06:00:00" in text
+    assert "#SBATCH --mail-user=hoeb@mnm-team.org" in text
+    assert "srun --ntasks=2197" in text
+    assert "cd /scratch/j1" in text
+
+
+def test_pbs_batch_golden():
+    spec = parse_jobspec(lulesh_example())
+    text = pbs_batch(spec)
+    assert "#PBS -N lulesh_dash" in text
+    assert "#PBS -l nodes=46:ppn=48" in text
+    assert "mpirun -np 2197" in text
+
+
+def test_unsupported_scheduler_matches_paper():
+    spec = parse_jobspec({"job": {"name": "x"}})
+    with pytest.raises(ValueError, match="not supported so far"):
+        make_batch(spec, "lsf")
+
+
+# ------------------------------------------------------------ job machine
+
+def test_job_state_transitions():
+    j = Job("id", "n")
+    j.transition(JobState.RUNNING)
+    j.transition(JobState.FAILED)
+    j.transition(JobState.PENDING)  # requeue allowed
+    with pytest.raises(ValueError):
+        Job("id2", "n").transition(JobState.FINISHED)
+
+
+def test_scheduler_runs_and_requeues():
+    sched = LocalScheduler()
+    calls = []
+
+    def fn(job):
+        calls.append(1)
+        if len(calls) == 1:
+            raise RuntimeError("boom")
+        return 42
+
+    jid = sched.submit(fn, "flaky")
+    assert sched.status(jid) is JobState.FAILED
+    assert "boom" in sched.logs(jid)[1]
+    sched.requeue(jid)
+    assert sched.status(jid) is JobState.FINISHED
+    assert sched.result(jid) == 42
+    assert sched.jobs[jid].restarts == 1
+
+
+# ------------------------------------------------------------------ tuner
+
+def test_tuner_nemotron_needs_8bit_moments():
+    plan = tune(get_config("nemotron-4-340b"), SHAPES["train_4k"],
+                get_target("lrz:tpu-v5e-pod"))
+    assert plan.optimizer == "adamw8bit"
+    assert plan.microbatches >= 8
+
+
+def test_tuner_small_model_keeps_fp32():
+    plan = tune(get_config("stablelm-1.6b"), SHAPES["train_4k"],
+                get_target("lrz:tpu-v5e-pod"))
+    assert plan.optimizer == "adamw"
+
+
+def test_tuner_decode_no_remat():
+    plan = tune(get_config("deepseek-7b"), SHAPES["decode_32k"],
+                get_target("lrz:tpu-v5e-pod"))
+    assert plan.remat_policy == "none"
+    assert plan.microbatches == 1
+
+
+def test_plan_json_roundtrip():
+    from repro.core.plan import DeploymentPlan
+    plan = tune(get_config("dbrx-132b"), SHAPES["train_4k"],
+                get_target("lrz:tpu-v5e-2pod"))
+    plan2 = DeploymentPlan.from_json(plan.to_json())
+    assert plan2.mesh_shape == (2, 16, 16)
+    assert plan2.optimizer == plan.optimizer
+    assert "EASEY tuning report" in plan2.report()

@@ -1,0 +1,41 @@
+"""Fused RMSNorm kernel sweep vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import rmsnorm
+
+CASES = [
+    ((4, 128), 128, jnp.float32),
+    ((2, 64, 256), 64, jnp.float32),
+    ((8, 1024), 256, jnp.bfloat16),
+    ((3, 5, 384), 7, jnp.bfloat16),     # odd rows force block shrink
+    ((1, 512), 1024, jnp.float32),      # block > rows
+]
+
+
+@pytest.mark.parametrize("shape,block,dtype", CASES)
+def test_rmsnorm_matches_ref(shape, block, dtype, rng):
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, shape, jnp.float32).astype(dtype)
+    w = jax.random.normal(k2, (shape[-1],), jnp.float32)
+    got = rmsnorm(x, w, block_rows=block)
+    want = ref.rmsnorm_ref(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_rmsnorm_matches_model_layer(rng):
+    from repro.models.layers import rmsnorm as layer_rmsnorm
+    x = jax.random.normal(rng, (4, 32, 128), jnp.bfloat16)
+    w = jnp.ones((128,), jnp.float32)
+    got = rmsnorm(x, w)
+    want = layer_rmsnorm(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=2e-2,
+                               atol=2e-2)

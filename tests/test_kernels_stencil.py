@@ -1,0 +1,77 @@
+"""Sedov stencil kernel vs the lulesh oracle: grids/blocks sweep +
+boundary exactness + multi-step stability."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import sedov_step_kernel
+from repro.kernels.sedov_stencil import cfl_dt
+from repro.models import lulesh
+
+
+def _developed_state(n, warm=3):
+    cfg = lulesh.LuleshConfig(grid=n)
+    st_ = lulesh.init_state(cfg)
+    for _ in range(warm):
+        st_ = lulesh.step(st_, cfg)
+    return cfg, st_
+
+
+@pytest.mark.parametrize("n,bx", [(8, 4), (16, 4), (16, 8), (16, 16),
+                                  (24, 8), (32, 16)])
+def test_kernel_matches_oracle(n, bx):
+    cfg, st_ = _developed_state(n)
+    got = sedov_step_kernel(st_, cfg, block_x=bx)
+    want = lulesh.step(st_, cfg)
+    for f in ("rho", "e", "v"):
+        scale = float(jnp.abs(want[f]).max()) + 1e-12
+        err = float(jnp.abs(got[f] - want[f]).max()) / scale
+        assert err < 1e-6, (f, n, bx, err)
+
+
+def test_boundary_rows_exact():
+    """Edge-clamped boundary must match the oracle exactly — the blast
+    starts in the corner, so boundary errors show up immediately."""
+    cfg, st_ = _developed_state(16, warm=1)
+    got = sedov_step_kernel(st_, cfg, block_x=4)
+    want = lulesh.step(st_, cfg)
+    for f in ("rho", "e"):
+        g, w = np.asarray(got[f]), np.asarray(want[f])
+        np.testing.assert_allclose(g[0], w[0], rtol=1e-6)
+        np.testing.assert_allclose(g[-1], w[-1], rtol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.sampled_from([8, 16]), bx=st.sampled_from([4, 8]),
+       warm=st.integers(0, 4))
+def test_kernel_property_random_states(n, bx, warm):
+    if bx > n:
+        return
+    cfg, st_ = _developed_state(n, warm=warm)
+    got = sedov_step_kernel(st_, cfg, block_x=bx)
+    want = lulesh.step(st_, cfg)
+    for f in ("rho", "e", "v"):
+        scale = float(jnp.abs(want[f]).max()) + 1e-12
+        assert float(jnp.abs(got[f] - want[f]).max()) / scale < 1e-5
+
+
+def test_multi_step_kernel_trajectory():
+    """10 kernel steps stay glued to 10 oracle steps."""
+    cfg, st_k = _developed_state(16, warm=0)
+    st_o = {k: v for k, v in st_k.items()}
+    for _ in range(10):
+        st_k = sedov_step_kernel(st_k, cfg, block_x=8)
+        st_o = lulesh.step(st_o, cfg)
+    for f in ("rho", "e"):
+        scale = float(jnp.abs(st_o[f]).max()) + 1e-12
+        assert float(jnp.abs(st_k[f] - st_o[f]).max()) / scale < 1e-4
+
+
+def test_cfl_dt_positive_and_shrinks_with_energy():
+    cfg, st_ = _developed_state(8, warm=0)
+    dt = float(cfl_dt(st_))
+    assert dt > 0
+    hot = dict(st_, e=st_["e"] * 100)
+    assert float(cfl_dt(hot)) < dt

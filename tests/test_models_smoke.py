@@ -1,0 +1,71 @@
+"""Per-arch smoke: reduced config, one forward/train step on CPU,
+output shapes + no NaNs (deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import list_archs, smoke_config
+from repro.configs.base import ShapeConfig
+from repro.core.plan import DeploymentPlan
+from repro.data.pipeline import DataPipeline
+from repro.models.params import init_params, param_count
+from repro.models.transformer import model_for
+from repro.optim import AdamW
+from repro.training.steps import build_train_step, init_train_state
+
+SMALL = ShapeConfig("smoke", seq_len=64, global_batch=2, kind="train")
+LM_ARCHS = [a for a in list_archs() if a != "lulesh-dash"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_forward_loss_finite(arch, rng):
+    cfg = smoke_config(arch)
+    model = model_for(cfg)
+    params = init_params(model.param_table(), rng)
+    batch = DataPipeline(model, SMALL).batch_at(0)
+    loss, metrics = model.loss(params, batch, None)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), (arch, loss)
+    assert param_count(model.param_table()) > 0
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "granite-moe-3b-a800m",
+                                  "xlstm-1.3b", "zamba2-7b", "whisper-tiny"])
+def test_train_step_decreases_loss(arch, rng):
+    cfg = smoke_config(arch)
+    model = model_for(cfg)
+    plan = DeploymentPlan(arch=arch, shape="smoke", target="local:cpu",
+                          mesh_shape=(1,), mesh_axes=("data",),
+                          microbatches=2)
+    opt = AdamW(weight_decay=0.0)
+    step = jax.jit(build_train_step(model, opt, plan, peak_lr=3e-3,
+                                    warmup_steps=2))
+    params = init_params(model.param_table(), rng)
+    state = init_train_state(model, opt, params, plan)
+    pipe = DataPipeline(model, SMALL)
+    first = last = None
+    for i in range(8):
+        batch = pipe.batch_at(0)  # same batch -> loss must drop
+        state, metrics = step(state, batch)
+        loss = float(metrics["loss"])
+        assert jnp.isfinite(loss), (arch, i)
+        first = loss if first is None else first
+        last = loss
+    assert last < first, (arch, first, last)
+
+
+def test_lulesh_blast_wave_propagates():
+    from repro.models import lulesh
+    cfg = lulesh.LuleshConfig(grid=16)
+    st = lulesh.init_state(cfg)
+    e0_corner = float(st["e"][0, 0, 0])
+    st = lulesh.run(st, cfg, 20)
+    assert bool(jnp.isfinite(st["e"]).all())
+    assert bool(jnp.isfinite(st["rho"]).all())
+    # the blast wave propagates: zones away from the corner gain energy
+    # and density is perturbed (the corner itself may transiently heat
+    # under compression in this proxy scheme, so no monotonicity there)
+    assert float(st["e"][1, 0, 0]) > 1e3     # wavefront reached neighbors
+    assert float(jnp.abs(st["rho"] - 1.0).max()) > 1e-3
+    assert float(st["t"]) > 0

@@ -1,0 +1,89 @@
+"""Property tests for the sharding rules engine (the AutoTuner's
+divisibility-fallback mechanism)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.sharding.rules import AxisRules, DEFAULT_RULES, logical_to_spec
+
+
+def _fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """A Mesh over numpy device placeholders — logical_to_spec only reads
+    axis names/sizes, so real devices are unnecessary."""
+    class _Dev:  # minimal stand-in
+        def __init__(self, i):
+            self.id = i
+    devs = np.array([_Dev(i) for i in range(int(np.prod(shape)))]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+MESH = _fake_mesh()
+MESH3 = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_divisible_dims_shard():
+    spec = logical_to_spec(("embed", "mlp"), (2048, 5632), MESH, DEFAULT_RULES)
+    assert spec == P("data", "model")
+
+
+def test_indivisible_dim_falls_back_with_record():
+    fb = []
+    spec = logical_to_spec(("kv_heads", None), (8, 128), MESH, DEFAULT_RULES, fb)
+    assert spec == P(None, None)       # 8 kv heads % 16 -> replicate
+    assert any("kv_heads" in f for f in fb)
+
+
+def test_axis_never_reused_within_spec():
+    rules = AxisRules(rules={"a": ("model",), "b": ("model",)})
+    spec = logical_to_spec(("a", "b"), (16, 16), MESH, rules)
+    assert spec == P("model", None)    # second dim cannot reuse 'model'
+
+
+def test_multi_axis_batch_on_multipod():
+    spec = logical_to_spec(("act_batch", "act_seq"), (256, 4096), MESH3,
+                           DEFAULT_RULES)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_partial_multi_axis_when_batch_small():
+    # batch=2 divides pod(2) but not pod*data(32): keep the pod factor only
+    spec = logical_to_spec(("act_batch",), (2,), MESH3, DEFAULT_RULES)
+    assert spec == P("pod")
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    dim=st.integers(1, 4096),
+    logical=st.sampled_from(["embed", "mlp", "heads", "vocab", "act_batch"]),
+)
+def test_spec_always_valid(dim, logical):
+    """Whatever the dim, the produced spec's axis product divides it."""
+    fb = []
+    spec = logical_to_spec((logical,), (dim,), MESH3, DEFAULT_RULES, fb)
+    entry = spec[0]
+    if entry is None:
+        return
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    sizes = dict(zip(MESH3.axis_names, MESH3.devices.shape))
+    prod = int(np.prod([sizes[a] for a in axes]))
+    assert dim % prod == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    shape=st.lists(st.sampled_from([1, 2, 8, 16, 40, 96, 256, 4096]),
+                   min_size=1, max_size=4),
+)
+def test_no_mesh_axis_used_twice(shape):
+    logicals = ["act_batch", "heads", "mlp", "vocab"][:len(shape)]
+    spec = logical_to_spec(tuple(logicals), tuple(shape), MESH3, DEFAULT_RULES)
+    used = []
+    for entry in spec:
+        if entry is None:
+            continue
+        used += list(entry) if isinstance(entry, tuple) else [entry]
+    assert len(used) == len(set(used)), spec

@@ -1,0 +1,45 @@
+"""End-to-end behaviour tests for the paper's system (EASEY on TPU):
+the three RUN commands the execution layer supports, driven exactly the
+way the middleware invokes them."""
+
+import pytest
+
+from repro.launch.run import run_command
+
+
+class _Job:
+    def __init__(self):
+        self.lines = []
+
+    def log(self, msg):
+        self.lines.append(msg)
+
+
+def test_run_train_command():
+    job = _Job()
+    out = run_command("train --steps 3 --seq-len 32 --global-batch 2 "
+                      "--arch stablelm-1.6b-smoke", job=job)
+    assert out["steps"] == 3
+    assert any("loss" in ln for ln in job.lines)
+
+
+def test_run_serve_command():
+    job = _Job()
+    out = run_command("serve --arch stablelm-1.6b-smoke --batch 2 "
+                      "--prefill 16 --decode 4", job=job)
+    assert out["decode_tokens"] == 4
+    assert out["decode_tok_per_s"] > 0
+
+
+def test_run_lulesh_paper_command():
+    """The exact command shape from the paper's Listing 1.5."""
+    job = _Job()
+    out = run_command("ch-run -b ./data:/data lulesh.dash -- "
+                      "/built/lulesh.dash -i 3 -s 8", job=job)
+    assert out["iters"] == 3 and out["grid"] == 8
+    assert out["fom"] > 0
+
+
+def test_unknown_command_rejected():
+    with pytest.raises(ValueError, match="unknown EASEY command"):
+        run_command("frobnicate --now")
