@@ -9,7 +9,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (fig3_weak_scaling, kernel_bench,
-                            overhead_breakdown, roofline_report, table1_fom)
+                            overhead_breakdown, roofline_report,
+                            serving_throughput, table1_fom)
 
     rows: list[tuple[str, float, str]] = []
 
@@ -19,7 +20,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     for mod in (table1_fom, fig3_weak_scaling, overhead_breakdown,
-                kernel_bench, roofline_report):
+                kernel_bench, roofline_report, serving_throughput):
         try:
             mod.run(report)
         except Exception as e:  # noqa: BLE001 — report and continue

@@ -1,0 +1,67 @@
+"""Serving throughput: static (gang-scheduled) vs continuous batching.
+
+One engine, one Zipf-length request trace (heavy-tailed prompts and
+generation lengths — the regime real serving traffic lives in), both
+scheduling policies over the same jitted steps and KV pool shape.  The
+paper's claim transfers: auto-derived deployment parameters (here: the
+KV pool and in-flight batching) give the optimized run "with negligible
+overhead" vs the naive static deployment.
+
+Reports tokens/sec for both policies, the speedup, and the decode-step
+counts (deterministic for the fixed trace, so the speedup is explainable:
+static burns steps waiting for each batch's longest request).
+"""
+
+from __future__ import annotations
+
+import time
+
+SLOTS = 8
+MAX_LEN = 128
+N_REQUESTS = 32
+TRACE_SEED = 0
+
+
+def _setup():
+    from repro.serving import ServeEngine, zipf_trace
+    engine = ServeEngine(arch="deepseek-7b-smoke", target="local:cpu",
+                         num_slots=SLOTS, max_len=MAX_LEN, seed=0,
+                         log=lambda *a, **k: None)
+    reqs = zipf_trace(N_REQUESTS, engine.cfg.vocab_size, max_prompt=48,
+                      max_new=64, alpha=1.3, seed=TRACE_SEED)
+    return engine, reqs
+
+
+def run(report) -> None:
+    engine, reqs = _setup()
+    # warm ALL jit caches the trace will touch (every prompt-length bucket
+    # compiles its own prefill/insert) so neither timed run pays compile
+    engine.run(reqs, policy="continuous")
+
+    t0 = time.perf_counter()
+    static = engine.run(reqs, policy="static")
+    t_static = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    cont = engine.run(reqs, policy="continuous")
+    t_cont = time.perf_counter() - t0
+
+    speedup = cont.tokens_per_s / max(static.tokens_per_s, 1e-9)
+    report("serve_static_batching",
+           t_static / max(static.decode_steps, 1) * 1e6,
+           f"{static.tokens_per_s:.1f} tok/s; {static.decode_steps} steps; "
+           f"occupancy {static.occupancy:.0%}")
+    report("serve_continuous_batching",
+           t_cont / max(cont.decode_steps, 1) * 1e6,
+           f"{cont.tokens_per_s:.1f} tok/s; {cont.decode_steps} steps; "
+           f"occupancy {cont.occupancy:.0%}; speedup {speedup:.2f}x")
+
+
+def main():
+    def report(name, us, derived=""):
+        print(f"{name},{us:.3f},{derived}")
+    print("name,us_per_call,derived")
+    run(report)
+
+
+if __name__ == "__main__":
+    main()

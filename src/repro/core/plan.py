@@ -29,6 +29,8 @@ class DeploymentPlan:
     sequence_parallel: bool = False
     grad_compression: str = "none"        # none | ef_int8
     donate_state: bool = True
+    serve_slots: int = 0                  # KV-pool slots (serve mode; 0 = n/a)
+    serve_max_len: int = 0                # per-slot KV capacity (serve mode)
     sharding_fallbacks: list = dataclasses.field(default_factory=list)
     napkin: dict = dataclasses.field(default_factory=dict)
     notes: list = dataclasses.field(default_factory=list)
@@ -56,6 +58,9 @@ class DeploymentPlan:
                  f"  kernels         : {self.kernels}",
                  f"  seq parallel    : {self.sequence_parallel}",
                  f"  grad compression: {self.grad_compression}"]
+        if self.serve_slots:
+            lines.append(f"  serve kv pool   : {self.serve_slots} slots "
+                         f"x {self.serve_max_len}")
         if self.napkin:
             lines.append("  napkin math:")
             for k, v in self.napkin.items():

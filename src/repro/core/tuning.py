@@ -156,11 +156,30 @@ def tune(cfg: ModelConfig, shape: ShapeConfig, target: TargetSpec,
         plan.remat_policy = "none"
         # decode/prefill memory: params + kv cache
         if cfg.family in ("dense", "moe", "vlm", "encdec"):
-            kv = (2 * cfg.num_layers * shape.global_batch * shape.seq_len *
-                  cfg.num_kv_heads * cfg.head_dim * 2)
+            kv_per_token = 2 * cfg.num_layers * cfg.num_kv_heads * \
+                cfg.head_dim * 2  # k+v, bf16
             if cfg.family == "encdec":
-                kv *= 2
+                kv_per_token *= 2
+            kv = kv_per_token * shape.global_batch * shape.seq_len
             plan.napkin["kv_cache_per_chip"] = f"{kv/chips/1e9:.3f} GB"
+            # --- serve-mode KV pool sizing ---------------------------------
+            # The continuous-batching engine asks for (slots x max_len);
+            # the requested batch is honoured only while params + pool fit
+            # the HBM budget, otherwise the pool is capped — the serving
+            # analogue of the training escalation ladder.
+            budget = 0.85 * target.hbm_bytes - param_bytes / chips
+            per_slot = kv_per_token * shape.seq_len / chips
+            cap = max(int(budget // per_slot), 1) if per_slot > 0 else \
+                shape.global_batch
+            plan.serve_max_len = shape.seq_len
+            plan.serve_slots = max(1, min(shape.global_batch, cap))
+            plan.napkin["serve_pool"] = (
+                f"{plan.serve_slots} slots x {shape.seq_len} "
+                f"({plan.serve_slots * per_slot / 1e9:.3f} GB/chip)")
+            if plan.serve_slots < shape.global_batch:
+                plan.notes.append(
+                    f"serve: requested {shape.global_batch} slots exceed the "
+                    f"HBM budget -> pool capped at {plan.serve_slots}")
 
     # --- long-context sequence parallelism ---
     if shape.kind != "train" and shape.seq_len >= 131072 and \

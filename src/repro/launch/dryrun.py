@@ -75,7 +75,8 @@ def run_cell(arch: str, shape_name: str, mesh_key: str,
               f"args={mem['argument_size_in_bytes']/1e9:.2f}GB "
               f"temp={mem['temp_size_in_bytes']/1e9:.2f}GB")
 
-        ca = compiled.cost_analysis() or {}
+        from repro.analysis.hlo import xla_cost_analysis
+        ca = xla_cost_analysis(compiled)
         rec["cost_analysis"] = {"flops": float(ca.get("flops", -1)),
                                 "bytes_accessed": float(ca.get("bytes accessed", -1))}
         print(f"  cost_analysis (scan-body-once): flops={rec['cost_analysis']['flops']:.3e}")

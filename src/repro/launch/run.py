@@ -38,7 +38,10 @@ def run_command(command: str, job=None, workdir: Path | None = None,
             arch=kw.get("arch", _arch_from(build_result, "deepseek-7b-smoke")),
             batch=int(kw.get("batch", 4)),
             prefill_len=int(kw.get("prefill", 64)),
-            decode_tokens=int(kw.get("decode", 8)), log=log)
+            decode_tokens=int(kw.get("decode", 8)),
+            mode=kw.get("mode", "continuous"),
+            requests=int(kw.get("requests", 0)),
+            max_len=int(kw.get("max-len", 0)), log=log)
     if "lulesh" in name:
         import time
         from repro.models import lulesh

@@ -1,8 +1,11 @@
-"""Batched serving driver (EASEY RUN command `serve ...`).
+"""Serving driver (EASEY RUN command `serve ...`) — thin CLI over the
+continuous-batching ServeEngine (repro/serving/).
 
-Prefill a batch of requests, then decode tokens autoregressively with the
-donated KV cache.  Same model code as training; decode O(1)-state paths
-for the SSM/hybrid archs.
+Dense/MoE families go through the engine: a KV-cache pool sized by the
+tuner's serve-mode branch, slot-wise decode, and a scheduler that refills
+freed slots between steps.  Families without a slot-indexable attention
+cache (SSM, hybrid, enc-dec, VLM) keep the legacy fixed-batch path so
+`serve --arch xlstm-1.3b-smoke` still works.
 """
 
 from __future__ import annotations
@@ -10,21 +13,67 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.appspec import AppSpec
-from repro.core.build import BuildService
-from repro.core.target import get_target
-from repro.models.params import init_params
-from repro.models.transformer import model_for
-from repro.training.steps import build_decode_step, build_prefill_step
+from repro.configs.base import get_config
 
 
 def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
                prefill_len: int = 64, decode_tokens: int = 16,
-               target: str = "local:cpu", seed: int = 0, log=print) -> dict:
+               target: str = "local:cpu", seed: int = 0,
+               mode: str = "continuous", requests: int = 0,
+               max_len: int = 0, log=print) -> dict:
+    """Serve `requests` requests (default: one per slot) of `prefill_len`
+    prompts, `decode_tokens` generations each.  Reports per-request latency
+    and aggregate tokens/sec."""
+    cfg = get_config(arch)
+    from repro.serving.engine import SERVABLE_FAMILIES
+    if cfg.family not in SERVABLE_FAMILIES:
+        return _legacy_serve_main(arch, batch, prefill_len, decode_tokens,
+                                  target, seed, log)
+
+    from repro.serving import ServeEngine, uniform_trace
+    pool_len = max_len or (prefill_len + decode_tokens)
+    engine = ServeEngine(arch=arch, target=target, num_slots=batch,
+                         max_len=pool_len, seed=seed, log=log)
+    n = requests or engine.num_slots
+    reqs = uniform_trace(n, cfg.vocab_size, prompt_len=prefill_len,
+                         max_new=decode_tokens, seed=seed)
+    stats = engine.run(reqs, policy=mode)
+    for r in stats.results:
+        log(f"[serve]   req {r.rid}: {r.prompt_len}+{len(r.tokens)} tokens, "
+            f"ttft {r.ttft_s*1e3:.1f}ms, latency {r.latency_s*1e3:.1f}ms")
+    out = {
+        "arch": arch, "batch": engine.num_slots, "prefill_len": prefill_len,
+        "decode_tokens": decode_tokens, "mode": mode,
+        "requests": len(stats.results),
+        "decode_steps": stats.decode_steps,
+        "occupancy": stats.occupancy,
+        "decode_s": stats.wall_s,
+        "decode_tok_per_s": stats.tokens_per_s,
+        "latency_mean_s": float(np.mean([r.latency_s for r in stats.results])),
+        "sample": stats.results[0].tokens[:8],
+        "plan": engine.plan,
+    }
+    log(f"[serve] {mode}: {out['decode_tok_per_s']:.1f} tok/s aggregate, "
+        f"occupancy {stats.occupancy:.0%}")
+    return out
+
+
+def _legacy_serve_main(arch: str, batch: int, prefill_len: int,
+                       decode_tokens: int, target: str, seed: int,
+                       log=print) -> dict:
+    """Fixed-batch prefill-all/decode-all (pre-engine behaviour)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.appspec import AppSpec
+    from repro.core.build import BuildService
+    from repro.core.target import get_target
+    from repro.models.params import init_params
+    from repro.models.transformer import model_for
+    from repro.training.steps import build_decode_step, build_prefill_step
+
     app = AppSpec(arch=arch, shape="prefill_32k",
                   shape_overrides={"seq_len": prefill_len,
                                    "global_batch": batch},
@@ -50,17 +99,12 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
     logits.block_until_ready()
     t_prefill = time.perf_counter() - t0
 
-    # grow the self-attention cache to hold decode_tokens more positions
-    def grow(path_key, x):
-        return x
-
-    if "k" in cache:  # dense-family cache: pad seq axis
+    if "k" in cache:  # dense-family cache: pad seq axis for decode growth
         pad = decode_tokens
         for key in ("k", "v"):
             c = cache[key]
-            cache[key] = jnp.pad(c, [(0, 0)] * 2 + [(0, pad)] + [(0, 0)] * (c.ndim - 3))
-        if "xk" in cache:
-            pass  # cross-attention cache length is fixed (encoder side)
+            cache[key] = jnp.pad(c, [(0, 0)] * 2 + [(0, pad)] +
+                                 [(0, 0)] * (c.ndim - 3))
 
     tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     generated = [np.asarray(tokens)]
@@ -75,7 +119,7 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
     toks = np.concatenate(generated, axis=1)
     out = {
         "arch": arch, "batch": batch, "prefill_len": prefill_len,
-        "decode_tokens": decode_tokens,
+        "decode_tokens": decode_tokens, "mode": "legacy-static",
         "prefill_s": t_prefill, "decode_s": t_decode,
         "decode_tok_per_s": batch * (decode_tokens - 1) / max(t_decode, 1e-9),
         "sample": toks[0][:8].tolist(),
@@ -89,12 +133,20 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="deepseek-7b-smoke")
-    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--batch", type=int, default=4,
+                   help="KV pool slots (engine) / batch size (legacy)")
     p.add_argument("--prefill", type=int, default=64)
     p.add_argument("--decode", type=int, default=16)
+    p.add_argument("--mode", choices=("continuous", "static"),
+                   default="continuous")
+    p.add_argument("--requests", type=int, default=0,
+                   help="number of requests (default: one per slot)")
+    p.add_argument("--max-len", type=int, default=0,
+                   help="per-slot KV capacity (default: prefill+decode)")
     a = p.parse_args(argv)
     serve_main(arch=a.arch, batch=a.batch, prefill_len=a.prefill,
-               decode_tokens=a.decode)
+               decode_tokens=a.decode, mode=a.mode, requests=a.requests,
+               max_len=a.max_len)
 
 
 if __name__ == "__main__":

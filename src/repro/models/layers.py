@@ -130,10 +130,13 @@ _Q_CHUNK = 1024
 
 
 def _attn_one_chunk(q, k, v, mask, scale):
-    """q: (b,K,G,qc,dh)  k: (b,t,K,dh)  v: (b,t,K,dh)  mask: (qc,t) bool."""
+    """q: (b,K,G,qc,dh)  k: (b,t,K,dh)  v: (b,t,K,dh)
+    mask: (qc,t) bool, or (b,qc,t) for per-row masks (slot-wise decode)."""
     scores = jnp.einsum("bkgqd,btkd->bkgqt", q, k,
                         preferred_element_type=jnp.float32) * scale
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqt,btkd->bkgqd", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
@@ -150,6 +153,8 @@ def dot_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     causal: query i attends keys j <= i + q_offset.
     kv_len: optional valid-length of the kv sequence (decode with a
         pre-allocated cache).
+    q_offset / kv_len may also be (b,) vectors — per-row lengths for the
+    continuous-batching slot decode, producing a (b, qc, t) mask.
     Long sequences are processed in q-chunks via lax.map so the live score
     buffer is (b, H, q_chunk, t) instead of (b, H, s, t).
     """
@@ -160,9 +165,21 @@ def dot_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qg = q.reshape(b, s, K, G, dh).transpose(0, 2, 3, 1, 4)  # b,K,G,s,dh
 
     kv_pos = jnp.arange(t)
-    valid = kv_pos < (kv_len if kv_len is not None else t)
+    per_row = jnp.ndim(q_offset) == 1 or \
+        (kv_len is not None and jnp.ndim(kv_len) == 1)
+    if not per_row:
+        valid = kv_pos < (kv_len if kv_len is not None else t)
 
     def mask_for(q_pos):
+        if per_row:
+            m = jnp.ones((b, q_pos.shape[0], t), bool)
+            if kv_len is not None:
+                m = m & (kv_pos[None, None, :]
+                         < jnp.reshape(jnp.asarray(kv_len), (-1, 1, 1)))
+            if causal:
+                off = jnp.reshape(jnp.asarray(q_offset), (-1, 1, 1))
+                m = m & (kv_pos[None, None, :] <= (q_pos[None, :, None] + off))
+            return m
         m = valid[None, :]
         if causal:
             m = m & (kv_pos[None, :] <= (q_pos[:, None] + q_offset))
@@ -241,9 +258,21 @@ def attention(p: dict, x: jax.Array, cfg, mesh, *, positions: jax.Array,
     new_cache = None
     if mode == "decode":
         assert cache is not None and not cross
-        idx = cache["index"]  # scalar int32: number of tokens seen so far
+        idx = cache["index"]  # int32 tokens seen so far: scalar, or (b,)
         t = cache["k"].shape[1]
-        if window is not None and t <= window:
+        if jnp.ndim(idx) == 1:
+            # SLOT-WISE decode (continuous batching): every row is a pool
+            # slot at its own length.  The new kv lands at each row's own
+            # position (one-hot select — a per-row scatter that XLA fuses),
+            # and the mask is per-row causal-with-length.  Window is not
+            # applied: pool slots are already bounded by max_len.
+            assert s == 1, "slot-wise decode is single-token"
+            hit = (jnp.arange(t)[None, :] == idx[:, None])[..., None, None]
+            k_all = jnp.where(hit, k, cache["k"])
+            v_all = jnp.where(hit, v, cache["v"])
+            out = dot_attention(q, k_all, v_all, causal=True, q_offset=idx,
+                                kv_len=idx + s)
+        elif window is not None and t <= window:
             # RING BUFFER: cache holds only the last `t` positions.  Keys
             # carry absolute RoPE phases from write time, so order in the
             # buffer is irrelevant; everything valid is attendable.

@@ -171,10 +171,11 @@ class MoELM(DenseLM):
                                               {"k": ck, "v": cv, "index": ci})
                 return y, (nc["k"], nc["v"])
 
-            index = cache["index"]
+            index = cache["index"]   # scalar, or per-slot vector (serving)
             x, (nk, nv) = jax.lax.scan(
                 body_d, x, (blocks, cache["k"], cache["v"],
-                            jnp.broadcast_to(index, (self.cfg.num_layers,))))
+                            jnp.broadcast_to(
+                                index, (self.cfg.num_layers,) + jnp.shape(index))))
             return x, {"k": nk, "v": nv, "index": index + x.shape[1]}
 
         def body_p(carry, bp):

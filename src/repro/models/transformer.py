@@ -150,18 +150,6 @@ class DenseLM(BaseLM):
         # prefill / decode: per-layer cache travels as scan xs -> ys
         index = cache["index"] if cache is not None else None
 
-        def body(carry, xs):
-            bp, c = xs
-            y, nc = self.block_apply(bp, carry, mesh, positions, mode, c)
-            return y, nc
-
-        layer_caches = None
-        if mode == "decode":
-            layer_caches = {"k": cache["k"], "v": cache["v"],
-                            "index": jnp.broadcast_to(index, (self.cfg.num_layers,))}
-        else:  # prefill: caches created inside
-            layer_caches = None
-
         if mode == "decode":
             def body_d(carry, xs):
                 bp, ck, cv, ci = xs
@@ -169,9 +157,12 @@ class DenseLM(BaseLM):
                                          {"k": ck, "v": cv, "index": ci})
                 return y, (nc["k"], nc["v"])
 
+            # index is a scalar (static decode) or a per-slot vector
+            # (continuous batching); either way each scanned layer sees it.
             x, (nk, nv) = jax.lax.scan(
                 body_d, x, (blocks, cache["k"], cache["v"],
-                            jnp.broadcast_to(index, (self.cfg.num_layers,))))
+                            jnp.broadcast_to(
+                                index, (self.cfg.num_layers,) + jnp.shape(index))))
             new_cache = {"k": nk, "v": nv, "index": index + x.shape[1]}
             return x, new_cache
 
@@ -215,8 +206,12 @@ class DenseLM(BaseLM):
 
     def decode_step(self, params, cache, tokens, mesh):
         b, s = tokens.shape
-        positions = cache["index"] + jnp.broadcast_to(
-            jnp.arange(s, dtype=jnp.int32), (b, s))
+        idx = cache["index"]
+        if jnp.ndim(idx) == 1:      # slot-wise: per-row lengths
+            positions = idx[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+        else:
+            positions = idx + jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32), (b, s))
         x = L.embed(params["embed"], tokens, self.cfg, mesh, positions=positions)
         x, new_cache = self.backbone(params, x, positions, mesh, "decode",
                                      cache=cache)

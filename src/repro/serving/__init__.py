@@ -1,0 +1,11 @@
+"""Continuous-batching serving subsystem (KV pool + scheduler + engine)."""
+
+from repro.serving.engine import ServeEngine, SERVABLE_FAMILIES
+from repro.serving.pool import KVCachePool, PoolExhausted
+from repro.serving.scheduler import (Request, RequestResult, Scheduler,
+                                     ServeStats)
+from repro.serving.trace import uniform_trace, zipf_trace
+
+__all__ = ["ServeEngine", "SERVABLE_FAMILIES", "KVCachePool", "PoolExhausted",
+           "Request", "RequestResult", "Scheduler", "ServeStats",
+           "uniform_trace", "zipf_trace"]

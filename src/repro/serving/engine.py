@@ -1,0 +1,96 @@
+"""ServeEngine — the EASEY serving facade (continuous batching).
+
+Glues the existing layers together the same way the training driver does:
+
+    AppSpec(arch, decode shape) + TargetSpec --BuildService--> DeploymentPlan
+        (the tuner's serve-mode branch sizes the KV pool from the HBM
+         budget and records it in the plan)
+    model_for(cfg) + build_prefill_step / build_decode_step_slots
+        --> jitted steps (decode donates the pool cache)
+    KVCachePool + Scheduler --> continuous or gang-scheduled batching
+
+``launch/serve.py`` is a thin CLI over this class; the serving benchmark
+drives both policies through one engine so the comparison shares every
+compiled function.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.appspec import AppSpec
+from repro.core.build import BuildService
+from repro.core.target import get_target
+from repro.models.params import init_params
+from repro.models.transformer import model_for
+from repro.serving.pool import KVCachePool
+from repro.serving.scheduler import Scheduler, ServeStats
+from repro.training.steps import build_decode_step_slots, build_prefill_step
+
+SERVABLE_FAMILIES = ("dense", "moe")
+
+
+class ServeEngine:
+    """One model + one KV pool + jitted steps; runs request traces."""
+
+    def __init__(self, arch: str = "deepseek-7b-smoke",
+                 target: str = "local:cpu", num_slots: int = 8,
+                 max_len: int = 128, seed: int = 0,
+                 eos_id: int | None = None, log=print):
+        app = AppSpec(arch=arch, shape="decode_32k",
+                      shape_overrides={"seq_len": max_len,
+                                       "global_batch": num_slots},
+                      run="serve --engine continuous")
+        cfg = app.model_config
+        if cfg.family not in SERVABLE_FAMILIES:
+            raise NotImplementedError(
+                f"ServeEngine needs a slot-indexable attention KV cache; "
+                f"family {cfg.family!r} is served by the legacy static path")
+        if cfg.window:
+            raise NotImplementedError(
+                "slot-wise decode does not support sliding-window attention "
+                "yet (the pool would attend the full history)")
+        tgt = get_target(target)
+        result = BuildService().build(app, tgt, lower=False)
+        self.plan = result.plan
+        # the tuner may cap the pool below the requested batch (HBM budget)
+        self.num_slots = self.plan.serve_slots or num_slots
+        self.max_len = self.plan.serve_max_len or max_len
+        if self.num_slots < num_slots:
+            log(f"[serve] pool capped by HBM budget: "
+                f"{num_slots} -> {self.num_slots} slots")
+        self.cfg = cfg
+        self.model = model_for(cfg, remat="none")
+        self.mesh = None if tgt.num_chips == 1 else result.mesh
+        self.eos_id = eos_id
+        self.log = log
+        self.params = init_params(self.model.param_table(),
+                                  jax.random.PRNGKey(seed))
+        prefill = build_prefill_step(self.model, self.mesh)
+        decode = build_decode_step_slots(self.model, self.mesh)
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+
+    # -- step wrappers bound to the params ---------------------------------
+    def prefill_fn(self, tokens: jax.Array):
+        return self._prefill(self.params, {"tokens": tokens})
+
+    def decode_fn(self, cache, tokens, active):
+        return self._decode(self.params, cache, tokens, active)
+
+    # -- driving -----------------------------------------------------------
+    def make_pool(self) -> KVCachePool:
+        return KVCachePool(self.model, self.num_slots, self.max_len)
+
+    def run(self, requests, policy: str = "continuous") -> ServeStats:
+        """Drain `requests` under `policy` ('continuous' | 'static').
+
+        A fresh pool per run keeps back-to-back policy comparisons honest
+        (same cold cache state; jitted steps stay warm across runs).
+        """
+        sched = Scheduler(self.make_pool(), self.prefill_fn, self.decode_fn,
+                          eos_id=self.eos_id, policy=policy)
+        stats = sched.run(list(requests))
+        self.log(f"[serve:{policy}] {stats.summary()}")
+        return stats

@@ -1,0 +1,102 @@
+"""KVCachePool — a fixed-capacity, slot-indexed KV cache for serving.
+
+The pool owns one donated cache tree shaped like the model's decode cache
+but with a *slot* batch axis and a per-slot length vector:
+
+    k, v : (layers, num_slots, max_len, kv_heads, head_dim)
+    index: (num_slots,) int32 — tokens written per slot
+
+Slots are handed out from a free list (LIFO, deterministic), a prefilled
+request is scattered into its slot with ``insert`` and the whole pool rides
+through one slot-wise decode step per iteration, so requests of different
+lengths share every matmul.  Buffers are donated on both the insert and the
+decode path; the engine swaps the tree via ``update``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PoolExhausted(RuntimeError):
+    """alloc() on a pool with no free slots."""
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_insert(cache, slot, pk, pv):
+    """Write a batch-1 prefill cache (L, 1, s, K, dh) into `slot`[0:s)."""
+    s = pk.shape[2]
+    k = jax.lax.dynamic_update_slice(cache["k"], pk, (0, slot, 0, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], pv, (0, slot, 0, 0, 0))
+    index = cache["index"].at[slot].set(s)
+    return {"k": k, "v": v, "index": index}
+
+
+class KVCachePool:
+    """Fixed-capacity slot pool over a model's decode cache."""
+
+    def __init__(self, model, num_slots: int, max_len: int):
+        cfg = model.cfg
+        if cfg.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"KVCachePool serves attention-cache families (dense/moe), "
+                f"not {cfg.family!r}")
+        if cfg.window:
+            raise NotImplementedError(
+                "slot-wise decode does not apply sliding-window attention "
+                "yet; a windowed config served here would silently attend "
+                "the full history")
+        if num_slots < 1 or max_len < 1:
+            raise ValueError((num_slots, max_len))
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        kv_shape = (cfg.num_layers, num_slots, max_len,
+                    cfg.num_kv_heads, cfg.head_dim)
+        self.cache = {"k": jnp.zeros(kv_shape, cfg.activation_dtype),
+                      "v": jnp.zeros(kv_shape, cfg.activation_dtype),
+                      "index": jnp.zeros((num_slots,), jnp.int32)}
+        # LIFO free list: alloc() pops slot 0 first; a freed slot is the
+        # next one reissued (deterministic, cache-friendly).
+        self._free = list(range(num_slots - 1, -1, -1))
+        self.lengths = np.zeros((num_slots,), np.int64)  # host mirror
+
+    # -- slot lifecycle ----------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise PoolExhausted(
+                f"all {self.num_slots} KV slots are in flight")
+        return self._free.pop()
+
+    def free(self, slot: int) -> None:
+        if not 0 <= slot < self.num_slots:
+            raise ValueError(f"slot {slot} out of range")
+        if slot in self._free:
+            raise ValueError(f"slot {slot} is already free")
+        self.lengths[slot] = 0
+        self._free.append(slot)
+
+    # -- cache plumbing ----------------------------------------------------
+    def insert(self, slot: int, prefill_cache: dict) -> None:
+        """Scatter a (batch=1) prefill cache into `slot` positions [0, s)."""
+        pk, pv = prefill_cache["k"], prefill_cache["v"]
+        s = pk.shape[2]
+        if s > self.max_len:
+            raise ValueError(f"prefill length {s} > pool max_len {self.max_len}")
+        self.cache = _scatter_insert(self.cache, jnp.int32(slot), pk, pv)
+        self.lengths[slot] = s
+
+    def update(self, new_cache: dict, active_slots=()) -> None:
+        """Adopt the cache returned by a (donating) decode step; the length
+        mirror advances only for the slots that were active this step."""
+        self.cache = new_cache
+        for slot in active_slots:
+            self.lengths[slot] += 1

@@ -1,0 +1,170 @@
+"""Request scheduler: admission, in-flight batching, eviction-on-completion.
+
+Two policies over the same KVCachePool and jitted steps:
+
+* ``continuous`` — between decode steps, every freed slot is immediately
+  re-prefilled from the queue (continuous batching / in-flight batching).
+* ``static`` — gang scheduling: admit a full batch, drain it until the
+  *last* request finishes, then admit the next batch.  This is the old
+  ``launch/serve.py`` behaviour, kept as the benchmark baseline.
+
+The loop is host-driven: one slot-wise decode over the whole pool per
+iteration, greedy (argmax) sampling, one device->host sync per step for
+the sampled tokens.  Everything is deterministic for a fixed trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.pool import KVCachePool
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (s,) int32 token ids
+    max_new_tokens: int = 16
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    slot: int = -1
+    tokens: list = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first - self.t_submit
+
+
+@dataclasses.dataclass
+class ServeStats:
+    results: list
+    wall_s: float
+    decode_steps: int
+    generated_tokens: int
+    occupancy: float              # mean active-slot fraction per decode step
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / max(self.wall_s, 1e-9)
+
+    def summary(self) -> str:
+        lat = [r.latency_s for r in self.results]
+        return (f"{len(self.results)} requests, {self.generated_tokens} tokens "
+                f"in {self.wall_s:.3f}s -> {self.tokens_per_s:.1f} tok/s | "
+                f"{self.decode_steps} decode steps, "
+                f"occupancy {self.occupancy:.0%} | latency "
+                f"mean {np.mean(lat):.3f}s p max {np.max(lat):.3f}s")
+
+
+class Scheduler:
+    """Drains a request queue through repeated slot-wise decode calls."""
+
+    def __init__(self, pool: KVCachePool, prefill_fn, decode_fn,
+                 eos_id: int | None = None, policy: str = "continuous",
+                 clock=time.perf_counter):
+        if policy not in ("continuous", "static"):
+            raise ValueError(policy)
+        self.pool = pool
+        self.prefill_fn = prefill_fn        # (tokens (1,s)) -> logits, cache
+        self.decode_fn = decode_fn          # (cache, tokens, active) -> ...
+        self.eos_id = eos_id
+        self.policy = policy
+        self.clock = clock
+
+    # -- admission ---------------------------------------------------------
+    def _admit(self, req: Request, active, last_tokens, active_mask, done):
+        now = self.clock()
+        s = len(req.prompt)
+        budget = self.pool.max_len - s + 1   # writes stop at max_len - 1
+        max_new = min(req.max_new_tokens, budget)
+        st = RequestResult(rid=req.rid, prompt_len=s, max_new_tokens=max_new,
+                           t_submit=getattr(req, "_t_submit", now))
+        st.t_admit = now
+        tokens = jnp.asarray(np.asarray(req.prompt, np.int32))[None, :]
+        logits, cache = self.prefill_fn(tokens)
+        first = int(np.asarray(jnp.argmax(logits[0, -1], axis=-1)))
+        st.t_first = self.clock()
+        st.tokens.append(first)
+        if max_new == 1 or first == self.eos_id:
+            st.t_done = st.t_first
+            done.append(st)
+            return
+        slot = self.pool.alloc()
+        st.slot = slot
+        self.pool.insert(slot, cache)
+        active[slot] = st
+        last_tokens[slot, 0] = first
+        active_mask[slot] = 1
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, requests) -> ServeStats:
+        # validate up front: a mid-run rejection would throw away the
+        # stats of every request already served in this drain
+        for req in requests:
+            if len(req.prompt) > self.pool.max_len:
+                raise ValueError(
+                    f"request {req.rid}: prompt ({len(req.prompt)}) does "
+                    f"not fit pool max_len {self.pool.max_len}")
+        queue = deque(requests)
+        done: list[RequestResult] = []
+        active: dict[int, RequestResult] = {}
+        S = self.pool.num_slots
+        last_tokens = np.zeros((S, 1), np.int32)
+        active_mask = np.zeros((S,), np.int32)
+
+        t0 = self.clock()
+        for r in queue:
+            r._t_submit = t0
+        steps = 0
+        busy = 0
+        while queue or active:
+            if self.policy == "continuous" or not active:
+                while queue and self.pool.num_free:
+                    self._admit(queue.popleft(), active, last_tokens,
+                                active_mask, done)
+            if not active:
+                continue
+            logits, new_cache = self.decode_fn(
+                self.pool.cache, jnp.asarray(last_tokens),
+                jnp.asarray(active_mask))
+            self.pool.update(new_cache, tuple(active))
+            steps += 1
+            busy += len(active)
+            toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            now = self.clock()
+            for slot, st in list(active.items()):
+                tok = int(toks[slot])
+                st.tokens.append(tok)
+                last_tokens[slot, 0] = tok
+                if len(st.tokens) >= st.max_new_tokens or tok == self.eos_id:
+                    st.t_done = now
+                    done.append(st)
+                    del active[slot]
+                    active_mask[slot] = 0
+                    last_tokens[slot, 0] = 0
+                    self.pool.free(slot)
+
+        wall = self.clock() - t0
+        done.sort(key=lambda r: r.rid)
+        return ServeStats(
+            results=done, wall_s=wall, decode_steps=steps,
+            generated_tokens=sum(len(r.tokens) for r in done),
+            occupancy=busy / max(steps * S, 1))

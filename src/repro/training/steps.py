@@ -140,3 +140,21 @@ def build_decode_step(model, mesh=None):
     def decode_step(params, cache, tokens):
         return model.decode_step(params, cache, tokens, mesh)
     return decode_step
+
+
+def build_decode_step_slots(model, mesh=None):
+    """Slot-wise decode for the continuous-batching serving engine.
+
+    ``cache['index']`` is a per-slot length vector (one row per KV-pool
+    slot) and ``active`` flags the slots holding a live request.  Inactive
+    slots still ride through the batched matmuls — the fixed price of
+    slot-indexed batching — but their lengths do not advance, so a freed
+    slot can be re-prefilled between steps without disturbing its
+    neighbours.  Jittable; the engine donates the cache argument.
+    """
+    def decode_step(params, cache, tokens, active):
+        logits, new_cache = model.decode_step(params, cache, tokens, mesh)
+        keep = active.astype(bool)
+        new_index = jnp.where(keep, new_cache["index"], cache["index"])
+        return logits, dict(new_cache, index=new_index)
+    return decode_step

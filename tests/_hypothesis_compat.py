@@ -1,0 +1,110 @@
+"""Optional-hypothesis shim so tier-1 collects without the dependency.
+
+The property tests were written against hypothesis, but the runtime
+container does not ship it.  When hypothesis is importable we re-export
+the real ``given``/``settings``/``strategies``.  When it is not, ``@given``
+degrades to a *deterministic sweep*: each strategy draws ``max_examples``
+examples from a per-test seeded PRNG (stable across processes — the seed
+goes through SHA-512, not ``hash()``), so the same examples run every
+time and failures are reproducible.  No shrinking, no database — just the
+property exercised over a fixed spread of inputs.
+
+Usage (the only pattern the tier-1 suite needs):
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        """A draw function over a ``random.Random``."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _StrategiesModule:
+        """The subset of ``hypothesis.strategies`` the suite uses."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[rng.randrange(len(elements))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(inner, min_size=0, max_size=None):
+            hi = max_size if max_size is not None else min_size + 4
+
+            def draw(rng):
+                n = rng.randint(min_size, hi)
+                return [inner.example_from(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    strategies = _StrategiesModule()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        """Records max_examples on the (given-wrapped) test function."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        """Deterministic sweep: run the test over `max_examples` draws."""
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_compat_max_examples",
+                            getattr(fn, "_compat_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                rng = random.Random(
+                    f"easey:{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = {k: s.example_from(rng)
+                             for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # pytest must not see the strategy-drawn parameters as
+            # fixtures: expose a signature without them (real fixtures,
+            # if any, stay visible) and drop the __wrapped__ breadcrumb
+            # functools.wraps left, which inspect would follow otherwise.
+            sig = inspect.signature(fn)
+            runner.__signature__ = sig.replace(
+                parameters=[p for name, p in sig.parameters.items()
+                            if name not in strats])
+            del runner.__wrapped__
+            runner.is_hypothesis_fallback = True
+            return runner
+
+        return deco

@@ -1,0 +1,99 @@
+"""Golden-file tests for core/batch.py — the paper's Algorithm 1 text
+generation ("create batch_file; for each deployment parse to SLURM or PBS
+command") must not drift."""
+
+import pytest
+
+from repro.core.batch import make_batch, pbs_batch, slurm_batch
+from repro.core.jobspec import (DataItem, Deployment, Execution, JobSpec)
+
+
+def _rich_spec() -> JobSpec:
+    """Representative spec: mail + ram + one mpi and one plain execution
+    and input data (covers every conditional branch of the generators)."""
+    return JobSpec(
+        name="lulesh_dash",
+        mail="hoeb@mnm-team.org",
+        inputs=[DataItem(source="https://example.org/input.tar",
+                         protocol="https")],
+        deployment=Deployment(nodes=46, ram="90gb", cores_per_task=1,
+                              tasks_per_node=48, clocktime="06:00:00"),
+        executions=[
+            Execution("serial", "echo preparing"),
+            Execution("mpi", "ch-run -b ./data:/data lulesh.dash -- "
+                             "/built/lulesh.dash -i 1000 -s 13", 2197),
+        ])
+
+
+GOLDEN_SLURM = """\
+#!/bin/bash
+#SBATCH --job-name=lulesh_dash
+#SBATCH --nodes=46
+#SBATCH --ntasks-per-node=48
+#SBATCH --cpus-per-task=1
+#SBATCH --time=06:00:00
+#SBATCH --mem=90gb
+#SBATCH --mail-user=hoeb@mnm-team.org
+#SBATCH --mail-type=END,FAIL
+
+cd $EASEY_WORKDIR
+mkdir -p data
+echo preparing
+srun --ntasks=2197 ch-run -b ./data:/data lulesh.dash -- /built/lulesh.dash -i 1000 -s 13
+"""
+
+GOLDEN_PBS = """\
+#!/bin/bash
+#PBS -N lulesh_dash
+#PBS -l nodes=46:ppn=48
+#PBS -l walltime=06:00:00
+#PBS -l mem=90gb
+#PBS -M hoeb@mnm-team.org
+#PBS -m ae
+
+cd $EASEY_WORKDIR
+mkdir -p data
+echo preparing
+mpirun -np 2197 ch-run -b ./data:/data lulesh.dash -- /built/lulesh.dash -i 1000 -s 13
+"""
+
+GOLDEN_SLURM_PLAIN = """\
+#!/bin/bash
+#SBATCH --job-name=tiny
+#SBATCH --nodes=1
+#SBATCH --ntasks-per-node=1
+#SBATCH --cpus-per-task=1
+#SBATCH --time=01:00:00
+
+cd /scratch/tiny
+./a.out
+"""
+
+
+def test_slurm_golden():
+    assert slurm_batch(_rich_spec()) == GOLDEN_SLURM
+
+
+def test_pbs_golden():
+    assert pbs_batch(_rich_spec()) == GOLDEN_PBS
+
+
+def test_slurm_plain_golden_custom_workdir():
+    """No mail/ram/data/mpi -> every optional line is absent."""
+    spec = JobSpec(name="tiny",
+                   executions=[Execution("serial", "./a.out")])
+    assert slurm_batch(spec, workdir="/scratch/tiny") == GOLDEN_SLURM_PLAIN
+
+
+def test_make_batch_dispatch_and_local():
+    spec = _rich_spec()
+    assert make_batch(spec, "slurm") == GOLDEN_SLURM
+    assert make_batch(spec, "pbs") == GOLDEN_PBS
+    local = make_batch(spec, "local")
+    assert local.startswith("#!/bin/bash\n")
+    assert "srun" not in local and "echo preparing" in local
+
+
+def test_unsupported_scheduler_matches_paper_wording():
+    with pytest.raises(ValueError, match="not supported"):
+        make_batch(_rich_spec(), "lsf")

@@ -4,7 +4,7 @@ boundary exactness + multi-step stability."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.ops import sedov_step_kernel
 from repro.kernels.sedov_stencil import cfl_dt

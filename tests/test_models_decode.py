@@ -55,17 +55,24 @@ def test_prefill_plus_decode_matches_longer_prefill(arch, rng):
     logits_ref, _ = model.prefill(params, batch_long, None)
     logits_pre, cache = model.prefill(params, batch_short, None)
 
-    # grow dense-family kv caches by one slot for the decode step
+    # grow every attention kv cache by one slot for the decode step —
+    # recursively, so the hybrid family's nested shared_kv cache is grown
+    # too (an unpadded cache makes dynamic_update_slice clamp the write
+    # onto the last prompt position, silently corrupting attention)
     def grow(c):
-        out = dict(c)
-        for key in ("k", "v"):
-            if key in out and hasattr(out[key], "ndim") and out[key].ndim >= 3:
-                pad = [(0, 0)] * out[key].ndim
-                pad[2 if out[key].ndim == 5 else 1] = (0, 1)
-                out[key] = jnp.pad(out[key], pad)
+        out = {}
+        for key, v in c.items():
+            if isinstance(v, dict):
+                out[key] = grow(v)
+            elif key in ("k", "v") and hasattr(v, "ndim") and v.ndim >= 3:
+                pad = [(0, 0)] * v.ndim
+                pad[2 if v.ndim == 5 else 1] = (0, 1)
+                out[key] = jnp.pad(v, pad)
+            else:
+                out[key] = v
         return out
 
-    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+    if cfg.family in ("dense", "moe", "vlm", "encdec", "hybrid_mamba"):
         cache = grow(cache)
     next_tok = batch_long["tokens"][:, -1:]
     logits_dec, _ = model.decode_step(params, cache, next_tok, None)

@@ -3,7 +3,7 @@ divisibility-fallback mechanism)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 import jax
 from jax.sharding import Mesh, PartitionSpec as P

@@ -1,0 +1,117 @@
+"""Roundtrip tests for the two portable spec parsers:
+appspec.parse_appfile (the Dockerfile analogue) and jobspec.parse_jobspec
+(the paper's four-part JSON job configuration)."""
+
+import json
+
+import pytest
+
+from repro.core.appspec import AppSpec, KNOWN_DIRECTIVES, parse_appfile
+from repro.core.jobspec import lulesh_example, parse_jobspec
+
+
+# ---------------------------------------------------------------------------
+# Appfile
+
+
+def test_appfile_minimal_roundtrip():
+    text = "FROM arch:deepseek-7b\nSHAPE train_4k\nRUN train --steps 5\n"
+    spec = parse_appfile(text)
+    assert spec.arch == "deepseek-7b"
+    assert spec.shape == "train_4k"
+    assert spec.run == "train --steps 5"
+    assert spec.directives == ()
+    again = parse_appfile(spec.to_appfile())
+    assert again == AppSpec(arch="deepseek-7b", shape="train_4k",
+                            run="train --steps 5", directives=())
+
+
+def test_appfile_fully_populated_roundtrip():
+    spec = AppSpec(arch="mistral-large-123b", shape="decode_32k",
+                   run="serve --decode 32",
+                   directives=KNOWN_DIRECTIVES[:3],
+                   overrides={"num_layers": 4, "notes": "smoke"})
+    again = parse_appfile(spec.to_appfile())
+    assert again.arch == spec.arch and again.shape == spec.shape
+    assert again.run == spec.run
+    assert again.directives == spec.directives
+    assert again.overrides == {"num_layers": 4, "notes": "smoke"}
+    # a stable spec hashes stably (the package manifest key)
+    assert again.content_hash() == \
+        parse_appfile(spec.to_appfile()).content_hash()
+
+
+@pytest.mark.parametrize("text,match", [
+    ("FROM arch:x\nSHAPE train_4k\n###inject_rootkit###\n", "unknown directive"),
+    ("FROM image:x\nSHAPE train_4k\n", "FROM must reference"),
+    ("FROM arch:x\nSHAPE no_such_shape\n", "unknown shape"),
+    ("FROM arch:x\nSHAPE train_4k\nDANCE badly\n", "unparseable"),
+    ("SHAPE train_4k\n", "must contain FROM"),
+])
+def test_appfile_invalid_inputs(text, match):
+    with pytest.raises(ValueError, match=match):
+        parse_appfile(text)
+
+
+# ---------------------------------------------------------------------------
+# Job JSON
+
+
+def test_jobspec_minimal():
+    spec = parse_jobspec({"job": {"name": "j1"}})
+    assert spec.name == "j1"
+    assert spec.deployment.nodes == 1
+    assert spec.executions == [] and not spec.has_data
+    assert spec.mount == "/data"
+
+
+def test_jobspec_fully_populated_roundtrip():
+    d = {
+        "job": {"name": "full", "id": "abc123", "mail": "x@y.z"},
+        "data": {
+            "input": [{"source": "https://h/in.dat", "protocol": "https",
+                       "user": "u", "auth": "password"}],
+            "output": [{"destination": "scp://h/out", "protocol": "scp"}],
+            "mount": {"container-path": "/mnt/io"},
+        },
+        "deployment": {"nodes": 4, "ram": "8gb", "cores-per-task": 2,
+                       "tasks-per-node": 24, "clocktime": "00:30:00"},
+        "execution": [{"serial": {"command": "echo hi"}},
+                      {"mpi": {"command": "./solver", "mpi-tasks": 96}}],
+        "easey": {"arch": "deepseek-7b", "shape": "train_4k"},
+    }
+    a = parse_jobspec(d)
+    b = parse_jobspec(json.dumps(d))   # dict and JSON text parse identically
+    assert a == b
+    assert a.job_id == "abc123" and a.mail == "x@y.z"
+    assert a.mount == "/mnt/io" and a.has_data
+    assert a.inputs[0].protocol == "https" and a.inputs[0].auth == "password"
+    assert a.outputs[0].destination == "scp://h/out"
+    assert a.deployment.tasks_per_node == 24
+    assert [e.kind for e in a.executions] == ["serial", "mpi"]
+    assert a.executions[1].mpi_tasks == 96
+    assert a.easey == {"arch": "deepseek-7b", "shape": "train_4k"}
+
+
+def test_jobspec_paper_listing_parses():
+    spec = parse_jobspec(lulesh_example())
+    assert spec.deployment.nodes == 46
+    assert spec.executions[0].mpi_tasks == 2197
+    sid = spec.ensure_id()
+    assert sid and spec.ensure_id() == sid     # id is sticky once assigned
+
+
+def test_jobspec_invalid_fields():
+    with pytest.raises(ValueError, match="missing required 'job'"):
+        parse_jobspec({"deployment": {}})
+    with pytest.raises(ValueError, match="unsupported protocol"):
+        parse_jobspec({"job": {"name": "x"},
+                       "data": {"input": [{"source": "s",
+                                           "protocol": "carrier-pigeon"}]}})
+    with pytest.raises(NotImplementedError, match="gridftp"):
+        parse_jobspec({"job": {"name": "x"},
+                       "data": {"input": [{"source": "s",
+                                           "protocol": "gridftp"}]}})
+    with pytest.raises(ValueError, match="serial|mpi"):
+        parse_jobspec({"job": {"name": "x"},
+                       "execution": [{"quantum": {"command": "q"}}]})

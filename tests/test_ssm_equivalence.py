@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.models.mamba import ssd_chunkwise, ssd_decode, ssd_recurrent_ref
 from repro.models.ssm import (mlstm_chunkwise, mlstm_recurrent,
