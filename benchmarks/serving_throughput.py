@@ -1,39 +1,101 @@
-"""Serving throughput: static (gang-scheduled) vs continuous batching.
+"""Serving throughput: scheduling policies x KV memory layouts.
 
-One engine, one Zipf-length request trace (heavy-tailed prompts and
-generation lengths — the regime real serving traffic lives in), both
-scheduling policies over the same jitted steps and KV pool shape.  The
-paper's claim transfers: auto-derived deployment parameters (here: the
-KV pool and in-flight batching) give the optimized run "with negligible
-overhead" vs the naive static deployment.
+Two comparisons over the same jitted steps and seeded Zipf traces
+(heavy-tailed prompt and generation lengths — the regime real serving
+traffic lives in):
 
-Reports tokens/sec for both policies, the speedup, and the decode-step
-counts (deterministic for the fixed trace, so the speedup is explainable:
-static burns steps waiting for each batch's longest request).
+1. **static vs continuous** (PR 1): gang scheduling burns decode steps
+   waiting for each batch's longest request; continuous batching refills
+   freed slots between steps (~2x on the Zipf trace).
+2. **contiguous vs paged KV** (this PR): under the same tuner HBM budget
+   — enforced with a deliberately tight benchmark target — the
+   contiguous layout reserves slots x max_len worst cases and gets its
+   slot count capped, while the paged layout spends the budget on pages
+   and admits requests by *actual* tokens: strictly more in flight, and
+   fewer HBM bytes per admitted token.
+
+``--smoke`` runs a tiny version of the full grid (both layouts x both
+policies) and writes ``BENCH_serving.json`` with tokens/sec and
+HBM-bytes-per-admitted-token per cell, so CI tracks the perf trajectory.
 """
 
 from __future__ import annotations
 
+import json
+import sys
 import time
+from pathlib import Path
 
 SLOTS = 8
 MAX_LEN = 128
 N_REQUESTS = 32
 TRACE_SEED = 0
+TIGHT_SLOTS = 3          # contiguous slots the tight target affords
+ARCH = "deepseek-7b-smoke"
 
 
-def _setup():
-    from repro.serving import ServeEngine, zipf_trace
-    engine = ServeEngine(arch="deepseek-7b-smoke", target="local:cpu",
-                         num_slots=SLOTS, max_len=MAX_LEN, seed=0,
-                         log=lambda *a, **k: None)
-    reqs = zipf_trace(N_REQUESTS, engine.cfg.vocab_size, max_prompt=48,
-                      max_new=64, alpha=1.3, seed=TRACE_SEED)
-    return engine, reqs
+def _kv_token_bytes(cfg) -> int:
+    from repro.core.tuning import kv_bytes_per_token
+    return kv_bytes_per_token(cfg)
+
+
+def _register_tight_target(max_len: int = MAX_LEN) -> str:
+    """A CPU target whose HBM budget affords only TIGHT_SLOTS worst-case
+    contiguous slots — the regime where the paged layout's
+    tokens-not-worst-cases accounting shows up."""
+    from repro.configs.base import get_config
+    from repro.core.target import TARGETS, TargetSpec, register
+    from repro.core.tuning import param_count_estimate
+
+    name = "bench:serve-tight"
+    if name in TARGETS:
+        return name
+    cfg = get_config(ARCH)
+    param_bytes = 2 * param_count_estimate(cfg)
+    kv_budget = (TIGHT_SLOTS + 0.5) * _kv_token_bytes(cfg) * max_len
+    register(TargetSpec(
+        name=name, chip="cpu", mesh_shape=(1,), mesh_axes=("data",),
+        peak_flops=5e10, hbm_bw=2e10,
+        hbm_bytes=(param_bytes + kv_budget) / 0.85, ici_bw=1e9,
+        scheduler="local", kernels="reference",
+        description=f"serving-bench budget target: ~{TIGHT_SLOTS} "
+                    f"contiguous slots x {max_len}"))
+    return name
+
+
+def _engine(kv_layout: str, target: str = "local:cpu", slots: int = SLOTS,
+            max_len: int = MAX_LEN):
+    from repro.serving import ServeEngine
+    return ServeEngine(arch=ARCH, target=target, num_slots=slots,
+                       max_len=max_len, seed=0, kv_layout=kv_layout,
+                       log=lambda *a, **k: None)
+
+
+def _pool_bytes(engine) -> int:
+    cfg = engine.cfg
+    tok = _kv_token_bytes(cfg)
+    if engine.kv_layout == "paged":
+        return engine.num_pages * engine.page_size * tok
+    return engine.num_slots * engine.max_len * tok
+
+
+def _trace(n: int, engine, max_new: int = 64, seed: int = TRACE_SEED):
+    from repro.serving import zipf_trace
+    return zipf_trace(n, engine.cfg.vocab_size, max_prompt=48,
+                      max_new=max_new, alpha=1.3, seed=seed)
+
+
+def _bytes_per_token(engine, stats) -> float:
+    """Pool HBM bytes per admitted *resident* token at peak occupancy —
+    the over-reservation metric: a contiguous pool pins max_len per
+    request however short it is, so its peak resident tokens stay far
+    below capacity and the ratio stays high."""
+    return _pool_bytes(engine) / max(stats.peak_resident_tokens, 1)
 
 
 def run(report) -> None:
-    engine, reqs = _setup()
+    engine = _engine("contiguous")
+    reqs = _trace(N_REQUESTS, engine)
     # warm ALL jit caches the trace will touch (every prompt-length bucket
     # compiles its own prefill/insert) so neither timed run pays compile
     engine.run(reqs, policy="continuous")
@@ -55,8 +117,78 @@ def run(report) -> None:
            f"{cont.tokens_per_s:.1f} tok/s; {cont.decode_steps} steps; "
            f"occupancy {cont.occupancy:.0%}; speedup {speedup:.2f}x")
 
+    # --- long-tail layout comparison under one tight HBM budget ----------
+    tight = _register_tight_target()
+    e_cont = _engine("contiguous", target=tight)
+    e_paged = _engine("paged", target=tight)
+    ltrace = _trace(N_REQUESTS, e_cont)
+    e_cont.run(ltrace, policy="continuous")       # warm
+    e_paged.run(ltrace, policy="continuous")
+    t0 = time.perf_counter()
+    s_cont = e_cont.run(ltrace, policy="continuous")
+    t_c = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    s_paged = e_paged.run(ltrace, policy="continuous")
+    t_p = time.perf_counter() - t0
+    report("serve_contiguous_tight_budget",
+           t_c / max(s_cont.decode_steps, 1) * 1e6,
+           f"{s_cont.tokens_per_s:.1f} tok/s; {e_cont.num_slots} slots; "
+           f"peak {s_cont.peak_active} in flight; "
+           f"{_bytes_per_token(e_cont, s_cont):.0f} B/admitted-token")
+    report("serve_paged_tight_budget",
+           t_p / max(s_paged.decode_steps, 1) * 1e6,
+           f"{s_paged.tokens_per_s:.1f} tok/s; {e_paged.num_slots} slots; "
+           f"peak {s_paged.peak_active} in flight "
+           f"(+{s_paged.peak_active - s_cont.peak_active} vs contiguous); "
+           f"{_bytes_per_token(e_paged, s_paged):.0f} B/admitted-token; "
+           f"{s_paged.preemptions} preemptions")
+
+
+def run_smoke(out_path: str = "BENCH_serving.json",
+              n_requests: int = 12, max_new: int = 32) -> dict:
+    """Tiny grid (both layouts x both policies) on the tight-budget target;
+    emits tokens/sec and HBM-bytes-per-admitted-token per cell."""
+    tight = _register_tight_target()
+    cells = {}
+    for layout in ("contiguous", "paged"):
+        engine = _engine(layout, target=tight)
+        reqs = _trace(n_requests, engine, max_new=max_new)
+        engine.run(reqs, policy="continuous")     # warm the jit caches
+        for policy in ("static", "continuous"):
+            stats = engine.run(reqs, policy=policy)
+            cells[f"{layout}_{policy}"] = {
+                "tokens_per_s": round(stats.tokens_per_s, 2),
+                "hbm_bytes_per_admitted_token":
+                    round(_bytes_per_token(engine, stats), 1),
+                "pool_bytes": _pool_bytes(engine),
+                "slots": engine.num_slots,
+                "decode_steps": stats.decode_steps,
+                "generated_tokens": stats.generated_tokens,
+                "occupancy": round(stats.occupancy, 4),
+                "peak_active": stats.peak_active,
+                "preemptions": stats.preemptions,
+            }
+    out = {"arch": ARCH, "target": tight, "n_requests": n_requests,
+           "max_len": MAX_LEN, "trace_seed": TRACE_SEED, "cells": cells}
+    Path(out_path).write_text(json.dumps(out, indent=2))
+    pc = cells["paged_continuous"]
+    cc = cells["contiguous_continuous"]
+    print(f"wrote {out_path}: paged {pc['tokens_per_s']} tok/s @ "
+          f"{pc['hbm_bytes_per_admitted_token']} B/tok, peak "
+          f"{pc['peak_active']} | contiguous {cc['tokens_per_s']} tok/s @ "
+          f"{cc['hbm_bytes_per_admitted_token']} B/tok, peak "
+          f"{cc['peak_active']}")
+    if not pc["peak_active"] > cc["peak_active"]:
+        raise SystemExit("SMOKE FAIL: paged did not admit more concurrent "
+                         "requests than contiguous in the same budget")
+    return out
+
 
 def main():
+    if "--smoke" in sys.argv[1:]:
+        run_smoke()
+        return
+
     def report(name, us, derived=""):
         print(f"{name},{us:.3f},{derived}")
     print("name,us_per_call,derived")

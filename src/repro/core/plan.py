@@ -31,6 +31,8 @@ class DeploymentPlan:
     donate_state: bool = True
     serve_slots: int = 0                  # KV-pool slots (serve mode; 0 = n/a)
     serve_max_len: int = 0                # per-slot KV capacity (serve mode)
+    serve_page_size: int = 0              # paged KV: tokens per page
+    serve_num_pages: int = 0              # paged KV: pool pages (incl. junk 0)
     sharding_fallbacks: list = dataclasses.field(default_factory=list)
     napkin: dict = dataclasses.field(default_factory=dict)
     notes: list = dataclasses.field(default_factory=list)
@@ -61,6 +63,9 @@ class DeploymentPlan:
         if self.serve_slots:
             lines.append(f"  serve kv pool   : {self.serve_slots} slots "
                          f"x {self.serve_max_len}")
+        if self.serve_num_pages:
+            lines.append(f"  serve kv pages  : {self.serve_num_pages} pages "
+                         f"x {self.serve_page_size} tokens (paged layout)")
         if self.napkin:
             lines.append("  napkin math:")
             for k, v in self.napkin.items():

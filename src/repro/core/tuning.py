@@ -24,6 +24,12 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.plan import DeploymentPlan
 from repro.core.target import TargetSpec
 
+# paged serve layout: tokens per KV page, and the expected fraction of
+# max_len a request actually uses (heavy-tailed traces — the capacity
+# quote in the napkin is per *expected* tokens, not per worst case)
+SERVE_PAGE_SIZE = 16
+SERVE_EXPECTED_LEN_FRACTION = 0.25
+
 
 def param_count_estimate(cfg: ModelConfig) -> int:
     """Exact parameter count, straight from the model's ParamDef table
@@ -33,6 +39,18 @@ def param_count_estimate(cfg: ModelConfig) -> int:
     from repro.models.params import param_count
     from repro.models.transformer import model_for
     return param_count(model_for(cfg).param_table())
+
+
+def kv_bytes_per_token(cfg: ModelConfig) -> int:
+    """HBM bytes one KV-cache token costs (k+v, all layers) — the unit the
+    serve-mode budget is denominated in.  Single source of truth for the
+    tuner, the serving benchmark, and the budget-target tests."""
+    import jax.numpy as jnp
+    per = 2 * cfg.num_layers * cfg.num_kv_heads * cfg.head_dim * \
+        jnp.dtype(cfg.activation_dtype).itemsize
+    if cfg.family == "encdec":
+        per *= 2  # self- and cross-attention caches
+    return per
 
 
 def active_param_count(cfg: ModelConfig) -> int:
@@ -156,17 +174,18 @@ def tune(cfg: ModelConfig, shape: ShapeConfig, target: TargetSpec,
         plan.remat_policy = "none"
         # decode/prefill memory: params + kv cache
         if cfg.family in ("dense", "moe", "vlm", "encdec"):
-            kv_per_token = 2 * cfg.num_layers * cfg.num_kv_heads * \
-                cfg.head_dim * 2  # k+v, bf16
-            if cfg.family == "encdec":
-                kv_per_token *= 2
+            kv_per_token = kv_bytes_per_token(cfg)
             kv = kv_per_token * shape.global_batch * shape.seq_len
             plan.napkin["kv_cache_per_chip"] = f"{kv/chips/1e9:.3f} GB"
             # --- serve-mode KV pool sizing ---------------------------------
             # The continuous-batching engine asks for (slots x max_len);
             # the requested batch is honoured only while params + pool fit
             # the HBM budget, otherwise the pool is capped — the serving
-            # analogue of the training escalation ladder.
+            # analogue of the training escalation ladder.  Both KV layouts
+            # are sized and recorded: the contiguous pool reserves
+            # worst-case (max_len) per admitted request, the paged pool
+            # turns the same budget into *pages* so capacity is measured
+            # in expected tokens instead of worst cases.
             budget = 0.85 * target.hbm_bytes - param_bytes / chips
             per_slot = kv_per_token * shape.seq_len / chips
             cap = max(int(budget // per_slot), 1) if per_slot > 0 else \
@@ -180,6 +199,33 @@ def tune(cfg: ModelConfig, shape: ShapeConfig, target: TargetSpec,
                 plan.notes.append(
                     f"serve: requested {shape.global_batch} slots exceed the "
                     f"HBM budget -> pool capped at {plan.serve_slots}")
+            # paged layout: same budget buys a page pool.  Pages beyond the
+            # requested batch's worst case are pointless, so the pool is
+            # capped there; capacity is then quoted against the *expected*
+            # request length (heavy-tailed traces use ~1/4 of max_len on
+            # average), not against max_len.
+            page_size = min(SERVE_PAGE_SIZE, shape.seq_len)
+            page_bytes = kv_per_token * page_size / chips
+            worst_pages = shape.global_batch * \
+                math.ceil(shape.seq_len / page_size) + 1  # + junk page 0
+            budget_pages = max(int(budget // page_bytes), 2) \
+                if page_bytes > 0 else worst_pages
+            plan.serve_page_size = page_size
+            plan.serve_num_pages = min(budget_pages, worst_pages)
+            expected_len = max(
+                int(shape.seq_len * SERVE_EXPECTED_LEN_FRACTION), 1)
+            usable_tokens = (plan.serve_num_pages - 1) * page_size
+            paged_reqs = max(usable_tokens // expected_len, 1)
+            plan.napkin["kv_pages"] = plan.serve_num_pages
+            plan.napkin["page_size"] = page_size
+            plan.napkin["serve_pool_paged"] = (
+                f"{plan.serve_num_pages} pages x {page_size} "
+                f"({plan.serve_num_pages * page_bytes / 1e9:.3f} GB/chip)")
+            delta = paged_reqs / max(plan.serve_slots, 1) - 1.0
+            plan.napkin["serve_capacity_delta"] = (
+                f"contiguous {plan.serve_slots} worst-case reqs vs paged "
+                f"~{paged_reqs} expected-len({expected_len}) reqs "
+                f"({delta:+.0%})")
 
     # --- long-context sequence parallelism ---
     if shape.kind != "train" and shape.seq_len >= 131072 and \

@@ -41,7 +41,11 @@ def run_command(command: str, job=None, workdir: Path | None = None,
             decode_tokens=int(kw.get("decode", 8)),
             mode=kw.get("mode", "continuous"),
             requests=int(kw.get("requests", 0)),
-            max_len=int(kw.get("max-len", 0)), log=log)
+            max_len=int(kw.get("max-len", 0)),
+            kv_layout=kw.get("kv-layout", "contiguous"),
+            page_size=int(kw.get("page-size", 0)),
+            temperature=float(kw.get("temperature", 0.0)),
+            top_k=int(kw.get("top-k", 0)), log=log)
     if "lulesh" in name:
         import time
         from repro.models import lulesh

@@ -2,10 +2,13 @@
 continuous-batching ServeEngine (repro/serving/).
 
 Dense/MoE families go through the engine: a KV-cache pool sized by the
-tuner's serve-mode branch, slot-wise decode, and a scheduler that refills
-freed slots between steps.  Families without a slot-indexable attention
-cache (SSM, hybrid, enc-dec, VLM) keep the legacy fixed-batch path so
-`serve --arch xlstm-1.3b-smoke` still works.
+tuner's serve-mode branch (``--kv-layout contiguous`` reserves
+slots x max_len worst cases; ``--kv-layout paged`` buys a page pool with
+the same budget and admits by actual tokens), slot-wise decode with
+per-request sampling (``--temperature`` / ``--top-k``), and a scheduler
+that refills freed slots between steps.  Families without a
+slot-indexable attention cache (SSM, hybrid, enc-dec, VLM) keep the
+legacy fixed-batch path so `serve --arch xlstm-1.3b-smoke` still works.
 """
 
 from __future__ import annotations
@@ -22,7 +25,9 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
                prefill_len: int = 64, decode_tokens: int = 16,
                target: str = "local:cpu", seed: int = 0,
                mode: str = "continuous", requests: int = 0,
-               max_len: int = 0, log=print) -> dict:
+               max_len: int = 0, kv_layout: str = "contiguous",
+               page_size: int = 0, temperature: float = 0.0,
+               top_k: int = 0, log=print) -> dict:
     """Serve `requests` requests (default: one per slot) of `prefill_len`
     prompts, `decode_tokens` generations each.  Reports per-request latency
     and aggregate tokens/sec."""
@@ -35,10 +40,12 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
     from repro.serving import ServeEngine, uniform_trace
     pool_len = max_len or (prefill_len + decode_tokens)
     engine = ServeEngine(arch=arch, target=target, num_slots=batch,
-                         max_len=pool_len, seed=seed, log=log)
+                         max_len=pool_len, seed=seed, kv_layout=kv_layout,
+                         page_size=page_size, log=log)
     n = requests or engine.num_slots
     reqs = uniform_trace(n, cfg.vocab_size, prompt_len=prefill_len,
-                         max_new=decode_tokens, seed=seed)
+                         max_new=decode_tokens, seed=seed,
+                         temperature=temperature, top_k=top_k)
     stats = engine.run(reqs, policy=mode)
     for r in stats.results:
         log(f"[serve]   req {r.rid}: {r.prompt_len}+{len(r.tokens)} tokens, "
@@ -46,17 +53,21 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
     out = {
         "arch": arch, "batch": engine.num_slots, "prefill_len": prefill_len,
         "decode_tokens": decode_tokens, "mode": mode,
+        "kv_layout": kv_layout,
         "requests": len(stats.results),
         "decode_steps": stats.decode_steps,
         "occupancy": stats.occupancy,
+        "peak_active": stats.peak_active,
+        "preemptions": stats.preemptions,
         "decode_s": stats.wall_s,
         "decode_tok_per_s": stats.tokens_per_s,
         "latency_mean_s": float(np.mean([r.latency_s for r in stats.results])),
         "sample": stats.results[0].tokens[:8],
         "plan": engine.plan,
     }
-    log(f"[serve] {mode}: {out['decode_tok_per_s']:.1f} tok/s aggregate, "
-        f"occupancy {stats.occupancy:.0%}")
+    log(f"[serve] {kv_layout}:{mode}: {out['decode_tok_per_s']:.1f} tok/s "
+        f"aggregate, occupancy {stats.occupancy:.0%}, "
+        f"peak {stats.peak_active} in flight")
     return out
 
 
@@ -143,10 +154,21 @@ def main(argv=None):
                    help="number of requests (default: one per slot)")
     p.add_argument("--max-len", type=int, default=0,
                    help="per-slot KV capacity (default: prefill+decode)")
+    p.add_argument("--kv-layout", choices=("contiguous", "paged"),
+                   default="contiguous",
+                   help="KV memory layout: worst-case slots or page table")
+    p.add_argument("--page-size", type=int, default=0,
+                   help="tokens per KV page (paged; default: tuner's)")
+    p.add_argument("--temperature", type=float, default=0.0,
+                   help="sampling temperature (0 = greedy)")
+    p.add_argument("--top-k", type=int, default=0,
+                   help="top-k sampling filter (0 = off)")
     a = p.parse_args(argv)
     serve_main(arch=a.arch, batch=a.batch, prefill_len=a.prefill,
                decode_tokens=a.decode, mode=a.mode, requests=a.requests,
-               max_len=a.max_len)
+               max_len=a.max_len, kv_layout=a.kv_layout,
+               page_size=a.page_size, temperature=a.temperature,
+               top_k=a.top_k)
 
 
 if __name__ == "__main__":

@@ -260,7 +260,38 @@ def attention(p: dict, x: jax.Array, cfg, mesh, *, positions: jax.Array,
         assert cache is not None and not cross
         idx = cache["index"]  # int32 tokens seen so far: scalar, or (b,)
         t = cache["k"].shape[1]
-        if jnp.ndim(idx) == 1:
+        if "pages" in cache:
+            # PAGED slot-wise decode (continuous batching over a paged KV
+            # pool): this layer's cache is a page pool (num_pages,
+            # page_size, K, dh) and `pages` is the (slots, max_pages)
+            # int32 page table.  The new kv is scattered to each row's own
+            # page/offset; K/V are then read back *through the page table*
+            # (one gather per row) so attention sees the same
+            # (slots, max_pages*page_size, K, dh) layout the contiguous
+            # path uses — identical masks, identical softmax, identical
+            # tokens.  Rows with a zeroed page-table entry (freed /
+            # never-allocated slots) write into the reserved junk page 0,
+            # which no live table references.
+            assert s == 1, "slot-wise decode is single-token"
+            pages = cache["pages"]
+            n_pages, psize = cache["k"].shape[0], cache["k"].shape[1]
+            max_pages = pages.shape[1]
+            Kh, dh = k.shape[2], k.shape[3]
+            logical_page = jnp.clip(idx // psize, 0, max_pages - 1)
+            dest = jnp.take_along_axis(pages, logical_page[:, None],
+                                       axis=1)[:, 0]            # (slots,)
+            fpos = dest * psize + idx % psize
+            k_all = cache["k"].reshape(n_pages * psize, Kh, dh).at[fpos] \
+                .set(k[:, 0]).reshape(n_pages, psize, Kh, dh)
+            v_all = cache["v"].reshape(n_pages * psize, Kh, dh).at[fpos] \
+                .set(v[:, 0]).reshape(n_pages, psize, Kh, dh)
+            kg = jnp.take(k_all, pages, axis=0).reshape(
+                q.shape[0], max_pages * psize, Kh, dh)
+            vg = jnp.take(v_all, pages, axis=0).reshape(
+                q.shape[0], max_pages * psize, Kh, dh)
+            out = dot_attention(q, kg, vg, causal=True, q_offset=idx,
+                                kv_len=idx + s)
+        elif jnp.ndim(idx) == 1:
             # SLOT-WISE decode (continuous batching): every row is a pool
             # slot at its own length.  The new kv lands at each row's own
             # position (one-hot select — a per-row scatter that XLA fuses),

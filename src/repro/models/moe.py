@@ -165,18 +165,28 @@ class MoELM(DenseLM):
             return x, None
 
         if mode == "decode":
+            pages = cache.get("pages")
+
             def body_d(carry, xs):
-                bp, ck, cv, ci = xs
-                y, (nc, _) = self.block_apply(bp, carry, mesh, positions, "decode",
-                                              {"k": ck, "v": cv, "index": ci})
+                bp, ck, cv, ci = xs[:4]
+                layer_cache = {"k": ck, "v": cv, "index": ci}
+                if pages is not None:
+                    layer_cache["pages"] = xs[4]
+                y, (nc, _) = self.block_apply(bp, carry, mesh, positions,
+                                              "decode", layer_cache)
                 return y, (nc["k"], nc["v"])
 
             index = cache["index"]   # scalar, or per-slot vector (serving)
-            x, (nk, nv) = jax.lax.scan(
-                body_d, x, (blocks, cache["k"], cache["v"],
-                            jnp.broadcast_to(
-                                index, (self.cfg.num_layers,) + jnp.shape(index))))
-            return x, {"k": nk, "v": nv, "index": index + x.shape[1]}
+            L = self.cfg.num_layers
+            xs = (blocks, cache["k"], cache["v"],
+                  jnp.broadcast_to(index, (L,) + jnp.shape(index)))
+            if pages is not None:
+                xs = xs + (jnp.broadcast_to(pages, (L,) + pages.shape),)
+            x, (nk, nv) = jax.lax.scan(body_d, x, xs)
+            new_cache = {"k": nk, "v": nv, "index": index + x.shape[1]}
+            if pages is not None:
+                new_cache["pages"] = pages
+            return x, new_cache
 
         def body_p(carry, bp):
             y, (nc, _) = self.block_apply(bp, carry, mesh, positions, "prefill", None)

@@ -151,19 +151,30 @@ class DenseLM(BaseLM):
         index = cache["index"] if cache is not None else None
 
         if mode == "decode":
+            pages = cache.get("pages")
+
             def body_d(carry, xs):
-                bp, ck, cv, ci = xs
+                bp, ck, cv, ci = xs[:4]
+                layer_cache = {"k": ck, "v": cv, "index": ci}
+                if pages is not None:
+                    layer_cache["pages"] = xs[4]
                 y, nc = self.block_apply(bp, carry, mesh, positions, "decode",
-                                         {"k": ck, "v": cv, "index": ci})
+                                         layer_cache)
                 return y, (nc["k"], nc["v"])
 
             # index is a scalar (static decode) or a per-slot vector
-            # (continuous batching); either way each scanned layer sees it.
-            x, (nk, nv) = jax.lax.scan(
-                body_d, x, (blocks, cache["k"], cache["v"],
-                            jnp.broadcast_to(
-                                index, (self.cfg.num_layers,) + jnp.shape(index))))
+            # (continuous batching); the paged layout adds the shared
+            # (slots, max_pages) page table.  Either way each scanned
+            # layer sees its own copy.
+            L = self.cfg.num_layers
+            xs = (blocks, cache["k"], cache["v"],
+                  jnp.broadcast_to(index, (L,) + jnp.shape(index)))
+            if pages is not None:
+                xs = xs + (jnp.broadcast_to(pages, (L,) + pages.shape),)
+            x, (nk, nv) = jax.lax.scan(body_d, x, xs)
             new_cache = {"k": nk, "v": nv, "index": index + x.shape[1]}
+            if pages is not None:
+                new_cache["pages"] = pages
             return x, new_cache
 
         # prefill
@@ -201,7 +212,13 @@ class DenseLM(BaseLM):
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
         x = self.embed_inputs(params, batch, mesh, positions)
         x, cache = self.backbone(params, x, positions, mesh, "prefill")
-        logits = self.logits_from(params, x[:, -1:], mesh)
+        # optional batch["last"]: the true final-token position when the
+        # prompt is right-padded to a bucketed length (serving re-uses one
+        # compiled prefill per bucket; causality keeps rows <= last exact)
+        last = batch.get("last")
+        x_last = x[:, -1:] if last is None else \
+            jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+        logits = self.logits_from(params, x_last, mesh)
         return logits, cache
 
     def decode_step(self, params, cache, tokens, mesh):

@@ -1,11 +1,20 @@
-"""Continuous-batching serving subsystem (KV pool + scheduler + engine)."""
+"""Continuous-batching serving subsystem.
 
-from repro.serving.engine import ServeEngine, SERVABLE_FAMILIES
-from repro.serving.pool import KVCachePool, PoolExhausted
+Layered as: KV pool (contiguous ``KVCachePool`` or page-table
+``PagedKVCachePool`` memory layouts) + ``Scheduler`` (admission,
+in-flight batching, page-pressure preemption, per-request sampling) +
+``ServeEngine`` facade (tuner-sized pools, jitted steps, ``kv_layout``
+selection).
+"""
+
+from repro.serving.engine import KV_LAYOUTS, SERVABLE_FAMILIES, ServeEngine
+from repro.serving.pool import KVCachePool, PagedKVCachePool, PoolExhausted
+from repro.serving.sampling import make_sampler
 from repro.serving.scheduler import (Request, RequestResult, Scheduler,
                                      ServeStats)
 from repro.serving.trace import uniform_trace, zipf_trace
 
-__all__ = ["ServeEngine", "SERVABLE_FAMILIES", "KVCachePool", "PoolExhausted",
-           "Request", "RequestResult", "Scheduler", "ServeStats",
-           "uniform_trace", "zipf_trace"]
+__all__ = ["ServeEngine", "SERVABLE_FAMILIES", "KV_LAYOUTS", "KVCachePool",
+           "PagedKVCachePool", "PoolExhausted", "Request", "RequestResult",
+           "Scheduler", "ServeStats", "make_sampler", "uniform_trace",
+           "zipf_trace"]

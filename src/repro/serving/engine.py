@@ -3,15 +3,28 @@
 Glues the existing layers together the same way the training driver does:
 
     AppSpec(arch, decode shape) + TargetSpec --BuildService--> DeploymentPlan
-        (the tuner's serve-mode branch sizes the KV pool from the HBM
-         budget and records it in the plan)
-    model_for(cfg) + build_prefill_step / build_decode_step_slots
+        (the tuner's serve-mode branch sizes BOTH KV layouts from the HBM
+         budget: a contiguous slots x max_len pool and a paged
+         num_pages x page_size pool, and records them in the plan/napkin)
+    model_for(cfg) + build_prefill_step +
+        build_decode_step_slots / build_decode_step_slots_paged
         --> jitted steps (decode donates the pool cache)
-    KVCachePool + Scheduler --> continuous or gang-scheduled batching
+    KVCachePool | PagedKVCachePool + Scheduler
+        --> continuous or gang-scheduled batching
+
+``kv_layout`` selects the memory layer:
+
+* ``"contiguous"`` — every slot pins max_len positions of HBM; the slot
+  count is the tuner's worst-case cap (``plan.serve_slots``).
+* ``"paged"`` — slots hold page lists over a budget-sized page pool
+  (``plan.serve_num_pages`` x ``plan.serve_page_size``); concurrency is
+  bounded by actual tokens, so heavy-tailed traces admit far more
+  requests in the same budget (at the cost of page-pressure preemptions
+  when the tail bites).
 
 ``launch/serve.py`` is a thin CLI over this class; the serving benchmark
-drives both policies through one engine so the comparison shares every
-compiled function.
+drives both layouts and both policies through engines that share the
+request traces, so every comparison is apples-to-apples.
 """
 
 from __future__ import annotations
@@ -24,11 +37,15 @@ from repro.core.build import BuildService
 from repro.core.target import get_target
 from repro.models.params import init_params
 from repro.models.transformer import model_for
-from repro.serving.pool import KVCachePool
+from repro.serving.pool import KVCachePool, PagedKVCachePool
+from repro.serving.sampling import make_sampler
 from repro.serving.scheduler import Scheduler, ServeStats
-from repro.training.steps import build_decode_step_slots, build_prefill_step
+from repro.training.steps import (build_decode_step_slots,
+                                  build_decode_step_slots_paged,
+                                  build_prefill_step)
 
 SERVABLE_FAMILIES = ("dense", "moe")
+KV_LAYOUTS = ("contiguous", "paged")
 
 
 class ServeEngine:
@@ -37,11 +54,14 @@ class ServeEngine:
     def __init__(self, arch: str = "deepseek-7b-smoke",
                  target: str = "local:cpu", num_slots: int = 8,
                  max_len: int = 128, seed: int = 0,
-                 eos_id: int | None = None, log=print):
+                 eos_id: int | None = None, kv_layout: str = "contiguous",
+                 page_size: int = 0, num_pages: int = 0, log=print):
+        if kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"kv_layout {kv_layout!r} not in {KV_LAYOUTS}")
         app = AppSpec(arch=arch, shape="decode_32k",
                       shape_overrides={"seq_len": max_len,
                                        "global_batch": num_slots},
-                      run="serve --engine continuous")
+                      run=f"serve --engine continuous --kv-layout {kv_layout}")
         cfg = app.model_config
         if cfg.family not in SERVABLE_FAMILIES:
             raise NotImplementedError(
@@ -54,12 +74,40 @@ class ServeEngine:
         tgt = get_target(target)
         result = BuildService().build(app, tgt, lower=False)
         self.plan = result.plan
-        # the tuner may cap the pool below the requested batch (HBM budget)
-        self.num_slots = self.plan.serve_slots or num_slots
+        self.kv_layout = kv_layout
         self.max_len = self.plan.serve_max_len or max_len
-        if self.num_slots < num_slots:
-            log(f"[serve] pool capped by HBM budget: "
-                f"{num_slots} -> {self.num_slots} slots")
+        if kv_layout == "paged":
+            # the page pool, not the slot count, is the HBM reservation:
+            # slots are page-table rows, so the engine keeps the requested
+            # concurrency (capped only by one-page-per-active-request)
+            self.page_size = page_size or self.plan.serve_page_size or 16
+            if num_pages:
+                self.num_pages = num_pages
+            elif self.plan.serve_num_pages and \
+                    self.page_size == self.plan.serve_page_size:
+                self.num_pages = self.plan.serve_num_pages
+            elif self.plan.serve_num_pages:
+                # tuner sized the pool for its own page size — carry the
+                # *token* budget over to the requested page size
+                tokens = (self.plan.serve_num_pages - 1) * \
+                    self.plan.serve_page_size
+                self.num_pages = max(tokens // self.page_size, 1) + 1
+            else:
+                self.num_pages = 0
+            usable = (self.num_pages - 1) if self.num_pages else num_slots
+            self.num_slots = max(1, min(num_slots, usable))
+            if self.num_slots < num_slots:
+                log(f"[serve] pool capped by page budget: {num_slots} -> "
+                    f"{self.num_slots} slots (1 page per active request)")
+        else:
+            self.page_size = 0
+            self.num_pages = 0
+            # the tuner may cap the pool below the requested batch (HBM
+            # budget): a contiguous slot is a worst-case reservation
+            self.num_slots = self.plan.serve_slots or num_slots
+            if self.num_slots < num_slots:
+                log(f"[serve] pool capped by HBM budget: "
+                    f"{num_slots} -> {self.num_slots} slots")
         self.cfg = cfg
         self.model = model_for(cfg, remat="none")
         self.mesh = None if tgt.num_chips == 1 else result.mesh
@@ -67,20 +115,31 @@ class ServeEngine:
         self.log = log
         self.params = init_params(self.model.param_table(),
                                   jax.random.PRNGKey(seed))
+        self.sampler = make_sampler(seed)
         prefill = build_prefill_step(self.model, self.mesh)
-        decode = build_decode_step_slots(self.model, self.mesh)
         self._prefill = jax.jit(prefill)
+        if kv_layout == "paged":
+            decode = build_decode_step_slots_paged(self.model, self.mesh)
+        else:
+            decode = build_decode_step_slots(self.model, self.mesh)
         self._decode = jax.jit(decode, donate_argnums=(1,))
 
     # -- step wrappers bound to the params ---------------------------------
-    def prefill_fn(self, tokens: jax.Array):
-        return self._prefill(self.params, {"tokens": tokens})
+    def prefill_fn(self, tokens: jax.Array, last: int | None = None):
+        batch = {"tokens": tokens}
+        if last is not None:
+            batch["last"] = jnp.int32(last)
+        return self._prefill(self.params, batch)
 
-    def decode_fn(self, cache, tokens, active):
-        return self._decode(self.params, cache, tokens, active)
+    def decode_fn(self, cache, tokens, active, *extras):
+        return self._decode(self.params, cache, tokens, active, *extras)
 
     # -- driving -----------------------------------------------------------
-    def make_pool(self) -> KVCachePool:
+    def make_pool(self):
+        if self.kv_layout == "paged":
+            return PagedKVCachePool(self.model, self.num_slots, self.max_len,
+                                    page_size=self.page_size,
+                                    num_pages=self.num_pages)
         return KVCachePool(self.model, self.num_slots, self.max_len)
 
     def run(self, requests, policy: str = "continuous") -> ServeStats:
@@ -90,7 +149,8 @@ class ServeEngine:
         (same cold cache state; jitted steps stay warm across runs).
         """
         sched = Scheduler(self.make_pool(), self.prefill_fn, self.decode_fn,
-                          eos_id=self.eos_id, policy=policy)
+                          eos_id=self.eos_id, policy=policy,
+                          sampler=self.sampler)
         stats = sched.run(list(requests))
-        self.log(f"[serve:{policy}] {stats.summary()}")
+        self.log(f"[serve:{self.kv_layout}:{policy}] {stats.summary()}")
         return stats

@@ -1,20 +1,43 @@
-"""KVCachePool — a fixed-capacity, slot-indexed KV cache for serving.
+"""KV cache pools — the serving stack's memory layer, in two layouts.
 
-The pool owns one donated cache tree shaped like the model's decode cache
-but with a *slot* batch axis and a per-slot length vector:
+``KVCachePool`` (contiguous) owns one donated cache tree shaped like the
+model's decode cache but with a *slot* batch axis and a per-slot length
+vector:
 
     k, v : (layers, num_slots, max_len, kv_heads, head_dim)
     index: (num_slots,) int32 — tokens written per slot
 
-Slots are handed out from a free list (LIFO, deterministic), a prefilled
-request is scattered into its slot with ``insert`` and the whole pool rides
-through one slot-wise decode step per iteration, so requests of different
-lengths share every matmul.  Buffers are donated on both the insert and the
+Every admitted request pins ``max_len`` positions of HBM for its whole
+lifetime, whatever its actual length — simple, but the pool's capacity is
+*worst cases*, not tokens.
+
+``PagedKVCachePool`` breaks that reservation: KV storage is a pool of
+fixed-size pages plus a per-slot page-table indirection,
+
+    k, v      : (layers, num_pages, page_size, kv_heads, head_dim)
+    index     : (num_slots,) int32 — tokens written per slot
+    page_table: (num_slots, max_pages) int32 — host-side, shipped to the
+                decode step each iteration as a plain argument
+
+so a request only ever holds ``ceil(len / page_size)`` pages and the
+tuner's HBM budget buys admitted *tokens* instead of admitted worst
+cases.  Page 0 is a reserved junk page: inactive slots (zeroed
+page-table rows) scatter their dead writes there and nothing ever reads
+it through a live page table.  Pages grow on demand during decode
+(``prepare_decode``); when the pool is out of pages the scheduler
+preempts a request and resumes it later.
+
+Both pools hand out slots/pages from deterministic LIFO free lists with
+an O(1) boolean free-mask (no linear membership scans), scatter prefilled
+requests in with ``insert``, and ride the whole pool through one
+slot-wise decode step per iteration so requests of different lengths
+share every matmul.  Buffers are donated on both the insert and the
 decode path; the engine swaps the tree via ``update``.
 """
 
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
@@ -23,7 +46,51 @@ import numpy as np
 
 
 class PoolExhausted(RuntimeError):
-    """alloc() on a pool with no free slots."""
+    """alloc() on a pool with no free slots / no free pages."""
+
+
+class _FreeList:
+    """Deterministic LIFO free list with an O(1) boolean free-mask.
+
+    ``pop()`` hands out the lowest index first on a fresh pool; a freed
+    index is the next one reissued (cache-friendly, reproducible).  The
+    mask replaces the old O(n) ``idx in list`` membership scan on free.
+    """
+
+    def __init__(self, n: int, start: int = 0):
+        self._items = list(range(n - 1 + start, start - 1, -1))
+        self._mask = np.zeros((n + start,), bool)
+        self._mask[start:] = True
+        self.start = start
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def pop(self) -> int:
+        idx = self._items.pop()
+        self._mask[idx] = False
+        return idx
+
+    def push(self, idx: int) -> None:
+        if self._mask[idx]:
+            raise ValueError(f"index {idx} is already free")
+        self._mask[idx] = True
+        self._items.append(idx)
+
+    def is_free(self, idx: int) -> bool:
+        return bool(self._mask[idx])
+
+
+def _check_servable(cfg):
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"KV pools serve attention-cache families (dense/moe), "
+            f"not {cfg.family!r}")
+    if cfg.window:
+        raise NotImplementedError(
+            "slot-wise decode does not apply sliding-window attention "
+            "yet; a windowed config served here would silently attend "
+            "the full history")
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -36,20 +103,32 @@ def _scatter_insert(cache, slot, pk, pv):
     return {"k": k, "v": v, "index": index}
 
 
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_insert_paged(cache, slot, pages_row, pk, pv):
+    """Write a batch-1 prefill cache (L, 1, s, K, dh) through `pages_row`.
+
+    Token position j lands in page ``pages_row[j // page_size]`` at offset
+    ``j % page_size`` — the same indirection the decode step reads back.
+    """
+    L, _, s, K, dh = pk.shape
+    P, psize = cache["k"].shape[1], cache["k"].shape[2]
+    pos = jnp.arange(s)
+    fpos = pages_row[pos // psize] * psize + pos % psize  # (s,)
+    k = cache["k"].reshape(L, P * psize, K, dh).at[:, fpos].set(pk[:, 0])
+    v = cache["v"].reshape(L, P * psize, K, dh).at[:, fpos].set(pv[:, 0])
+    index = cache["index"].at[slot].set(s)
+    return {"k": k.reshape(L, P, psize, K, dh),
+            "v": v.reshape(L, P, psize, K, dh), "index": index}
+
+
 class KVCachePool:
-    """Fixed-capacity slot pool over a model's decode cache."""
+    """Fixed-capacity contiguous slot pool over a model's decode cache."""
+
+    layout = "contiguous"
 
     def __init__(self, model, num_slots: int, max_len: int):
         cfg = model.cfg
-        if cfg.family not in ("dense", "moe"):
-            raise NotImplementedError(
-                f"KVCachePool serves attention-cache families (dense/moe), "
-                f"not {cfg.family!r}")
-        if cfg.window:
-            raise NotImplementedError(
-                "slot-wise decode does not apply sliding-window attention "
-                "yet; a windowed config served here would silently attend "
-                "the full history")
+        _check_servable(cfg)
         if num_slots < 1 or max_len < 1:
             raise ValueError((num_slots, max_len))
         self.cfg = cfg
@@ -60,16 +139,25 @@ class KVCachePool:
         self.cache = {"k": jnp.zeros(kv_shape, cfg.activation_dtype),
                       "v": jnp.zeros(kv_shape, cfg.activation_dtype),
                       "index": jnp.zeros((num_slots,), jnp.int32)}
-        # LIFO free list: alloc() pops slot 0 first; a freed slot is the
-        # next one reissued (deterministic, cache-friendly).
-        self._free = list(range(num_slots - 1, -1, -1))
+        self._free = _FreeList(num_slots)
         self.lengths = np.zeros((num_slots,), np.int64)  # host mirror
 
-    # -- slot lifecycle ----------------------------------------------------
+    # -- capacity ----------------------------------------------------------
     @property
     def num_free(self) -> int:
         return len(self._free)
 
+    def can_admit(self, prompt_len: int, active_slots=()) -> bool:
+        """A contiguous slot IS the worst-case reservation: one free slot
+        admits any prompt that fits max_len."""
+        return self.num_free > 0 and prompt_len <= self.max_len
+
+    def can_ever_serve(self, n_tokens: int) -> bool:
+        """Whether a request resident at `n_tokens` could ever fit an
+        otherwise-empty pool (contiguous: max_len is the only bound)."""
+        return n_tokens <= self.max_len
+
+    # -- slot lifecycle ----------------------------------------------------
     def alloc(self) -> int:
         if not self._free:
             raise PoolExhausted(
@@ -79,10 +167,10 @@ class KVCachePool:
     def free(self, slot: int) -> None:
         if not 0 <= slot < self.num_slots:
             raise ValueError(f"slot {slot} out of range")
-        if slot in self._free:
+        if self._free.is_free(slot):
             raise ValueError(f"slot {slot} is already free")
         self.lengths[slot] = 0
-        self._free.append(slot)
+        self._free.push(slot)
 
     # -- cache plumbing ----------------------------------------------------
     def insert(self, slot: int, prefill_cache: dict) -> None:
@@ -94,9 +182,157 @@ class KVCachePool:
         self.cache = _scatter_insert(self.cache, jnp.int32(slot), pk, pv)
         self.lengths[slot] = s
 
+    def prepare_decode(self, active_slots) -> list:
+        """Contiguous slots never grow — nothing can starve."""
+        return []
+
+    def decode_extras(self) -> tuple:
+        """Extra per-step arguments for the jitted decode step."""
+        return ()
+
     def update(self, new_cache: dict, active_slots=()) -> None:
         """Adopt the cache returned by a (donating) decode step; the length
         mirror advances only for the slots that were active this step."""
+        self.cache = new_cache
+        for slot in active_slots:
+            self.lengths[slot] += 1
+
+
+class PagedKVCachePool:
+    """Page-table KV pool: slots hold page lists, not max_len reservations.
+
+    ``num_pages`` counts the whole pool *including* the reserved junk page
+    0, so ``num_pages - 1`` pages are allocatable.  A slot may hold at most
+    ``max_pages = ceil(max_len / page_size)`` pages (the same per-request
+    cap as a contiguous slot).  The page table lives on the host (alloc /
+    free are pure bookkeeping, no device traffic) and is shipped to the
+    decode step as a small int32 array each iteration.
+    """
+
+    layout = "paged"
+
+    def __init__(self, model, num_slots: int, max_len: int,
+                 page_size: int = 16, num_pages: int = 0):
+        cfg = model.cfg
+        _check_servable(cfg)
+        if num_slots < 1 or max_len < 1 or page_size < 1:
+            raise ValueError((num_slots, max_len, page_size))
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.max_pages = math.ceil(max_len / page_size)
+        # default: worst case (every slot at max_len) + the junk page —
+        # the tuner passes a budget-derived (smaller) pool instead
+        self.num_pages = num_pages or num_slots * self.max_pages + 1
+        if self.num_pages < 2:
+            raise ValueError(f"num_pages {self.num_pages} < 2 "
+                             f"(page 0 is reserved)")
+        kv_shape = (cfg.num_layers, self.num_pages, page_size,
+                    cfg.num_kv_heads, cfg.head_dim)
+        self.cache = {"k": jnp.zeros(kv_shape, cfg.activation_dtype),
+                      "v": jnp.zeros(kv_shape, cfg.activation_dtype),
+                      "index": jnp.zeros((num_slots,), jnp.int32)}
+        self.page_table = np.zeros((num_slots, self.max_pages), np.int32)
+        self._pages_held = np.zeros((num_slots,), np.int64)
+        self._free = _FreeList(num_slots)
+        self._free_pages = _FreeList(self.num_pages - 1, start=1)
+        self.lengths = np.zeros((num_slots,), np.int64)  # host mirror
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free_pages)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.page_size)
+
+    def can_admit(self, prompt_len: int, active_slots=()) -> bool:
+        """Admission needs a slot, pages for the prompt, and headroom for
+        the in-flight requests that are about to cross a page boundary —
+        reserving those avoids admit/preempt ping-pong under pressure."""
+        if self.num_free == 0 or prompt_len > self.max_len:
+            return False
+        imminent = sum(
+            1 for s in active_slots
+            if self.lengths[s] >= self._pages_held[s] * self.page_size)
+        return self.free_pages >= self.pages_for(prompt_len) + imminent
+
+    def can_ever_serve(self, n_tokens: int) -> bool:
+        """Whether a request resident at `n_tokens` could ever fit an
+        otherwise-empty pool (needs its pages all at once)."""
+        return n_tokens <= self.max_len and \
+            self.pages_for(n_tokens) <= self.num_pages - 1
+
+    # -- slot / page lifecycle ---------------------------------------------
+    def alloc(self) -> int:
+        if not self._free:
+            raise PoolExhausted(
+                f"all {self.num_slots} KV slots are in flight")
+        return self._free.pop()
+
+    def free(self, slot: int) -> None:
+        if not 0 <= slot < self.num_slots:
+            raise ValueError(f"slot {slot} out of range")
+        if self._free.is_free(slot):
+            raise ValueError(f"slot {slot} is already free")
+        for i in range(int(self._pages_held[slot])):
+            self._free_pages.push(int(self.page_table[slot, i]))
+        self.page_table[slot] = 0       # dead writes land in junk page 0
+        self._pages_held[slot] = 0
+        self.lengths[slot] = 0
+        self._free.push(slot)
+
+    def _grow(self, slot: int) -> bool:
+        """Append one page to `slot`; False when the pool is starved."""
+        held = int(self._pages_held[slot])
+        if held >= self.max_pages:
+            raise PoolExhausted(
+                f"slot {slot} already holds max_pages={self.max_pages}")
+        if not self._free_pages:
+            return False
+        self.page_table[slot, held] = self._free_pages.pop()
+        self._pages_held[slot] = held + 1
+        return True
+
+    # -- cache plumbing ----------------------------------------------------
+    def insert(self, slot: int, prefill_cache: dict) -> None:
+        """Allocate pages for a (batch=1) prefill cache and scatter it in."""
+        pk, pv = prefill_cache["k"], prefill_cache["v"]
+        s = pk.shape[2]
+        if s > self.max_len:
+            raise ValueError(f"prefill length {s} > pool max_len {self.max_len}")
+        need = self.pages_for(s)
+        if need > self.free_pages:
+            raise PoolExhausted(
+                f"prefill of {s} tokens needs {need} pages, "
+                f"{self.free_pages} free")
+        for _ in range(need - int(self._pages_held[slot])):
+            self._grow(slot)
+        self.cache = _scatter_insert_paged(
+            self.cache, jnp.int32(slot),
+            jnp.asarray(self.page_table[slot]), pk, pv)
+        self.lengths[slot] = s
+
+    def prepare_decode(self, active_slots) -> list:
+        """Grow every active slot whose next token crosses into a fresh
+        page; returns the slots the pool could not serve (page-starved),
+        in the deterministic order they were visited."""
+        starved = []
+        for slot in active_slots:
+            if self.lengths[slot] >= self._pages_held[slot] * self.page_size:
+                if not self._grow(slot):
+                    starved.append(slot)
+        return starved
+
+    def decode_extras(self) -> tuple:
+        return (jnp.asarray(self.page_table),)
+
+    def update(self, new_cache: dict, active_slots=()) -> None:
         self.cache = new_cache
         for slot in active_slots:
             self.lengths[slot] += 1

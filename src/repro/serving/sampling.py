@@ -1,0 +1,54 @@
+"""Per-request sampling for the slot-wise decode loop.
+
+Each pool slot samples with its *own* temperature / top-k / PRNG stream:
+the key for a draw is ``fold_in(fold_in(base, rid), step)`` where ``step``
+is how many tokens the request has generated so far.  Keying on the
+request id and the generation step (rather than the slot or the wall
+clock) makes sampling deterministic across admission order, slot
+assignment, *and* preemption — a request that is preempted and later
+resumed re-draws exactly the token stream it would have produced
+uninterrupted, which is what keeps the paged-vs-contiguous equivalence
+tests honest under page pressure.
+
+Greedy decoding is the ``temperature == 0`` row-wise special case, so a
+trace of default requests reproduces the old argmax scheduler bit-for-bit.
+Top-k is capped at ``K_CAP`` (one static ``lax.top_k``; per-row k masks
+below the row's k-th value); ``top_k == 0`` disables the filter.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+K_CAP = 64
+
+
+def make_sampler(seed: int, k_cap: int = K_CAP):
+    """Jitted (logits, temperature, top_k, rids, steps) -> (rows,) int32.
+
+    logits: (rows, vocab); temperature float32 (rows,); top_k/rids/steps
+    int32 (rows,).  Works for the full pool (rows = num_slots) and for
+    the single-row prefill first-token draw alike.
+    """
+    base = jax.random.PRNGKey(seed)
+
+    def _row(lg, temp, k, rid, step):
+        lg = lg.astype(jnp.float32)
+        greedy = jnp.argmax(lg).astype(jnp.int32)
+        key = jax.random.fold_in(jax.random.fold_in(base, rid), step)
+        kk = jnp.clip(k, 0, k_cap)
+        vals, _ = jax.lax.top_k(lg, k_cap)
+        kth = vals[jnp.maximum(kk - 1, 0)]
+        masked = jnp.where((kk > 0) & (lg < kth), -jnp.inf, lg)
+        drawn = jax.random.categorical(
+            key, masked / jnp.maximum(temp, 1e-6)).astype(jnp.int32)
+        # top_k == 1 IS argmax; routing it through categorical would break
+        # logit ties randomly where argmax breaks them by index
+        return jnp.where((temp > 0) & (kk != 1), drawn, greedy)
+
+    @jax.jit
+    def sample(logits, temperature, top_k, rids, steps):
+        return jax.vmap(_row)(logits, temperature, top_k, rids, steps)
+
+    return sample

@@ -1,6 +1,6 @@
-"""Request scheduler: admission, in-flight batching, eviction-on-completion.
+"""Request scheduler: admission, in-flight batching, eviction, preemption.
 
-Two policies over the same KVCachePool and jitted steps:
+Two policies over the same KV pool (contiguous or paged) and jitted steps:
 
 * ``continuous`` — between decode steps, every freed slot is immediately
   re-prefilled from the queue (continuous batching / in-flight batching).
@@ -8,9 +8,24 @@ Two policies over the same KVCachePool and jitted steps:
   *last* request finishes, then admit the next batch.  This is the old
   ``launch/serve.py`` behaviour, kept as the benchmark baseline.
 
-The loop is host-driven: one slot-wise decode over the whole pool per
-iteration, greedy (argmax) sampling, one device->host sync per step for
-the sampled tokens.  Everything is deterministic for a fixed trace.
+The scheduler is layout-agnostic: it admits through ``pool.can_admit``
+(contiguous pools count free *slots*; paged pools count free *pages*,
+with headroom reserved for in-flight requests about to cross a page
+boundary), grows paged slots before each decode step via
+``pool.prepare_decode``, and — when the page pool is starved mid-decode —
+**preempts** the youngest in-flight request: its slot and pages are
+freed and it is re-queued at the front.  A preempted request is resumed
+by re-prefilling its prompt plus everything it already generated, which
+reproduces its KV state exactly, so preemption never changes the token
+stream (greedy, and sampled too: the sampler keys on request id and
+generation step, not on slot or time).
+
+Sampling is per-request: ``Request.temperature`` / ``Request.top_k``
+ride through per-slot vectors into one jitted sampler call per step
+(``serving/sampling.py``); the default (temperature 0) is greedy argmax.
+The loop is host-driven, one slot-wise decode over the whole pool per
+iteration, one device->host sync per step for the sampled tokens.
+Everything is deterministic for a fixed trace.
 """
 
 from __future__ import annotations
@@ -22,7 +37,8 @@ from collections import deque
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.pool import KVCachePool
+from repro.serving.pool import PoolExhausted
+from repro.serving.sampling import K_CAP
 
 
 @dataclasses.dataclass
@@ -30,6 +46,8 @@ class Request:
     rid: int
     prompt: np.ndarray            # (s,) int32 token ids
     max_new_tokens: int = 16
+    temperature: float = 0.0      # 0 = greedy
+    top_k: int = 0                # 0 = no top-k filter
 
 
 @dataclasses.dataclass
@@ -39,6 +57,7 @@ class RequestResult:
     max_new_tokens: int
     slot: int = -1
     tokens: list = dataclasses.field(default_factory=list)
+    preemptions: int = 0
     t_submit: float = 0.0
     t_admit: float = 0.0
     t_first: float = 0.0
@@ -60,6 +79,9 @@ class ServeStats:
     decode_steps: int
     generated_tokens: int
     occupancy: float              # mean active-slot fraction per decode step
+    peak_active: int = 0          # max concurrent in-flight requests
+    peak_resident_tokens: int = 0  # max KV tokens held across the pool
+    preemptions: int = 0          # page-pressure evictions (paged pools)
 
     @property
     def tokens_per_s(self) -> float:
@@ -67,90 +89,222 @@ class ServeStats:
 
     def summary(self) -> str:
         lat = [r.latency_s for r in self.results]
+        pre = f", {self.preemptions} preemptions" if self.preemptions else ""
         return (f"{len(self.results)} requests, {self.generated_tokens} tokens "
                 f"in {self.wall_s:.3f}s -> {self.tokens_per_s:.1f} tok/s | "
                 f"{self.decode_steps} decode steps, "
-                f"occupancy {self.occupancy:.0%} | latency "
+                f"occupancy {self.occupancy:.0%}, "
+                f"peak {self.peak_active} in flight{pre} | latency "
                 f"mean {np.mean(lat):.3f}s p max {np.max(lat):.3f}s")
+
+
+@dataclasses.dataclass
+class _Entry:
+    """A queued unit of work: a fresh request, or a preempted one carrying
+    the result it must resume (tokens generated so far)."""
+    req: Request
+    st: RequestResult | None = None
+
+    @property
+    def pending_len(self) -> int:
+        """Prompt length at (re-)admission: original prompt plus anything
+        already generated before a preemption."""
+        n = len(self.req.prompt)
+        return n + len(self.st.tokens) if self.st is not None else n
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    st: RequestResult
+    admit_seq: int                # monotone; youngest = preemption victim
 
 
 class Scheduler:
     """Drains a request queue through repeated slot-wise decode calls."""
 
-    def __init__(self, pool: KVCachePool, prefill_fn, decode_fn,
+    def __init__(self, pool, prefill_fn, decode_fn,
                  eos_id: int | None = None, policy: str = "continuous",
-                 clock=time.perf_counter):
+                 sampler=None, clock=time.perf_counter):
         if policy not in ("continuous", "static"):
             raise ValueError(policy)
         self.pool = pool
         self.prefill_fn = prefill_fn        # (tokens (1,s)) -> logits, cache
-        self.decode_fn = decode_fn          # (cache, tokens, active) -> ...
+        self.decode_fn = decode_fn          # (cache, tokens, active, *extras)
         self.eos_id = eos_id
         self.policy = policy
+        self.sampler = sampler              # None -> greedy argmax
         self.clock = clock
+        self._admit_seq = 0
+        self._all_greedy = False
+
+    # -- sampling ----------------------------------------------------------
+    def _sample_rows(self, logits_last, entries):
+        """One sampler call over rows; entries[i] styles row i (None rows
+        sample greedily with a dead key)."""
+        if self.sampler is None or self._all_greedy:
+            return np.asarray(jnp.argmax(logits_last, axis=-1))
+        n = logits_last.shape[0]
+        temps = np.zeros((n,), np.float32)
+        topks = np.zeros((n,), np.int32)
+        rids = np.zeros((n,), np.int32)
+        steps = np.zeros((n,), np.int32)
+        for i, en in enumerate(entries):
+            if en is None:
+                continue
+            temps[i] = en.req.temperature
+            topks[i] = en.req.top_k
+            rids[i] = en.req.rid
+            steps[i] = len(en.st.tokens)
+        return np.asarray(self.sampler(
+            logits_last, jnp.asarray(temps), jnp.asarray(topks),
+            jnp.asarray(rids), jnp.asarray(steps)))
 
     # -- admission ---------------------------------------------------------
-    def _admit(self, req: Request, active, last_tokens, active_mask, done):
+    def _admit(self, entry: _Entry, active, last_tokens, active_mask, done):
         now = self.clock()
-        s = len(req.prompt)
-        budget = self.pool.max_len - s + 1   # writes stop at max_len - 1
-        max_new = min(req.max_new_tokens, budget)
-        st = RequestResult(rid=req.rid, prompt_len=s, max_new_tokens=max_new,
-                           t_submit=getattr(req, "_t_submit", now))
-        st.t_admit = now
-        tokens = jnp.asarray(np.asarray(req.prompt, np.int32))[None, :]
-        logits, cache = self.prefill_fn(tokens)
-        first = int(np.asarray(jnp.argmax(logits[0, -1], axis=-1)))
-        st.t_first = self.clock()
-        st.tokens.append(first)
-        if max_new == 1 or first == self.eos_id:
-            st.t_done = st.t_first
+        req = entry.req
+        if entry.st is None:
+            s = len(req.prompt)
+            budget = self.pool.max_len - s + 1   # writes stop at max_len - 1
+            st = RequestResult(
+                rid=req.rid, prompt_len=s,
+                max_new_tokens=min(req.max_new_tokens, budget),
+                t_submit=getattr(req, "_t_submit", now))
+            st.t_admit = now
+            prompt = np.asarray(req.prompt, np.int32)
+        else:                                    # resume after preemption
+            st = entry.st
+            prompt = np.concatenate([np.asarray(req.prompt, np.int32),
+                                     np.asarray(st.tokens, np.int32)])
+        # prefill lengths are bucketed to powers of two so resumes (whose
+        # lengths are arbitrary) reuse one compiled prefill per bucket:
+        # the prompt is right-padded, logits are read at the true last
+        # position, and the cache is sliced back before insertion (causal
+        # attention keeps positions < n independent of the padding)
+        n = len(prompt)
+        pad = 1 << (n - 1).bit_length()
+        if pad == n:
+            logits, cache = self.prefill_fn(jnp.asarray(prompt)[None, :])
+        else:
+            padded = np.zeros((pad,), np.int32)
+            padded[:n] = prompt
+            logits, cache = self.prefill_fn(jnp.asarray(padded)[None, :],
+                                            n - 1)
+            cache = {"k": cache["k"][:, :, :n], "v": cache["v"][:, :, :n],
+                     "index": jnp.asarray(n, jnp.int32)}
+        tok = int(self._sample_rows(logits[:, -1], [_Active(req, st, 0)])[0])
+        if entry.st is None:
+            st.t_first = self.clock()
+        st.tokens.append(tok)
+        if len(st.tokens) >= st.max_new_tokens or tok == self.eos_id:
+            st.t_done = self.clock()
             done.append(st)
             return
         slot = self.pool.alloc()
         st.slot = slot
         self.pool.insert(slot, cache)
-        active[slot] = st
-        last_tokens[slot, 0] = first
+        active[slot] = _Active(req, st, self._admit_seq)
+        self._admit_seq += 1
+        last_tokens[slot, 0] = tok
         active_mask[slot] = 1
+
+    # -- preemption --------------------------------------------------------
+    def _preempt(self, slot, active, last_tokens, active_mask, queue):
+        en = active.pop(slot)
+        en.st.slot = -1
+        en.st.preemptions += 1
+        active_mask[slot] = 0
+        last_tokens[slot, 0] = 0
+        self.pool.free(slot)                 # returns its pages
+        queue.appendleft(_Entry(en.req, en.st))
 
     # -- main loop ---------------------------------------------------------
     def run(self, requests) -> ServeStats:
         # validate up front: a mid-run rejection would throw away the
-        # stats of every request already served in this drain
+        # stats of every request already served in this drain.  Without an
+        # eos, generation is deterministic full-length, so a paged request
+        # whose worst-case residency outstrips the whole page pool is
+        # *guaranteed* to starve — reject it here instead of mid-decode.
+        # (With an eos the request might stop early; it is admitted
+        # optimistically and the mid-decode starvation path still raises.)
         for req in requests:
             if len(req.prompt) > self.pool.max_len:
                 raise ValueError(
                     f"request {req.rid}: prompt ({len(req.prompt)}) does "
                     f"not fit pool max_len {self.pool.max_len}")
-        queue = deque(requests)
+            if not 0 <= req.top_k <= K_CAP:
+                raise ValueError(
+                    f"request {req.rid}: top_k {req.top_k} not in "
+                    f"[0, {K_CAP}]")
+            worst = len(req.prompt) if self.eos_id is not None else \
+                min(len(req.prompt) + req.max_new_tokens - 1,
+                    self.pool.max_len)
+            if not self.pool.can_ever_serve(worst):
+                raise PoolExhausted(
+                    f"request {req.rid} needs {worst} resident KV tokens "
+                    f"but the pool can never hold that many")
+        # all-greedy traces skip the sampler (argmax is its temperature-0 /
+        # top_k-1 special case, so this is a pure fast path)
+        self._all_greedy = all(r.temperature <= 0 or r.top_k == 1
+                               for r in requests)
+        queue = deque(_Entry(r) for r in requests)
         done: list[RequestResult] = []
-        active: dict[int, RequestResult] = {}
+        active: dict[int, _Active] = {}
         S = self.pool.num_slots
         last_tokens = np.zeros((S, 1), np.int32)
         active_mask = np.zeros((S,), np.int32)
 
         t0 = self.clock()
-        for r in queue:
-            r._t_submit = t0
+        for en in queue:
+            en.req._t_submit = t0
         steps = 0
         busy = 0
+        peak = 0
+        peak_resident = 0
+        preemptions = 0
         while queue or active:
             if self.policy == "continuous" or not active:
-                while queue and self.pool.num_free:
+                while queue and self.pool.can_admit(queue[0].pending_len,
+                                                    tuple(active)):
                     self._admit(queue.popleft(), active, last_tokens,
                                 active_mask, done)
             if not active:
+                if queue:
+                    en = queue[0]
+                    raise PoolExhausted(
+                        f"request {en.req.rid} ({en.pending_len} tokens) "
+                        f"cannot be admitted into an otherwise idle pool — "
+                        f"the KV pool is too small for it")
                 continue
+            # paged pools grow slots crossing a page boundary; starvation
+            # preempts the youngest in-flight request until the step fits
+            while True:
+                starved = self.pool.prepare_decode(sorted(active))
+                if not starved:
+                    break
+                if len(active) == 1:
+                    (slot,) = active
+                    raise PoolExhausted(
+                        f"page starvation mid-decode: request "
+                        f"{active[slot].req.rid} holds every page and still "
+                        f"needs another — the page pool is too small for it")
+                victim = max(active, key=lambda sl: active[sl].admit_seq)
+                self._preempt(victim, active, last_tokens, active_mask, queue)
+                preemptions += 1
+            peak = max(peak, len(active))
+            peak_resident = max(peak_resident, int(self.pool.lengths.sum()))
             logits, new_cache = self.decode_fn(
                 self.pool.cache, jnp.asarray(last_tokens),
-                jnp.asarray(active_mask))
+                jnp.asarray(active_mask), *self.pool.decode_extras())
             self.pool.update(new_cache, tuple(active))
             steps += 1
             busy += len(active)
-            toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            rows = [active.get(i) for i in range(S)]
+            toks = self._sample_rows(logits[:, -1], rows)
             now = self.clock()
-            for slot, st in list(active.items()):
+            for slot, en in list(active.items()):
+                st = en.st
                 tok = int(toks[slot])
                 st.tokens.append(tok)
                 last_tokens[slot, 0] = tok
@@ -167,4 +321,6 @@ class Scheduler:
         return ServeStats(
             results=done, wall_s=wall, decode_steps=steps,
             generated_tokens=sum(len(r.tokens) for r in done),
-            occupancy=busy / max(steps * S, 1))
+            occupancy=busy / max(steps * S, 1),
+            peak_active=peak, peak_resident_tokens=peak_resident,
+            preemptions=preemptions)

@@ -25,8 +25,8 @@ def _bucket(n: int, max_prompt: int) -> int:
 
 
 def zipf_trace(n: int, vocab_size: int, *, max_prompt: int = 32,
-               max_new: int = 32, alpha: float = 1.3,
-               seed: int = 0) -> list[Request]:
+               max_new: int = 32, alpha: float = 1.3, seed: int = 0,
+               temperature: float = 0.0, top_k: int = 0) -> list[Request]:
     """n requests with Zipf-distributed prompt/generation lengths."""
     rng = np.random.RandomState(seed)
     reqs = []
@@ -36,16 +36,19 @@ def zipf_trace(n: int, vocab_size: int, *, max_prompt: int = 32,
         nnew = int(np.clip(rng.zipf(alpha), 1, max_new))
         prompt = rng.randint(1, max(vocab_size - 1, 2),
                              size=(plen,)).astype(np.int32)
-        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=nnew))
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=nnew,
+                            temperature=temperature, top_k=top_k))
     return reqs
 
 
 def uniform_trace(n: int, vocab_size: int, *, prompt_len: int = 16,
-                  max_new: int = 8, seed: int = 0) -> list[Request]:
+                  max_new: int = 8, seed: int = 0,
+                  temperature: float = 0.0, top_k: int = 0) -> list[Request]:
     """n same-length requests — the static/continuous equivalence case."""
     rng = np.random.RandomState(seed)
     return [Request(rid=i,
                     prompt=rng.randint(1, max(vocab_size - 1, 2),
                                        size=(prompt_len,)).astype(np.int32),
-                    max_new_tokens=max_new)
+                    max_new_tokens=max_new,
+                    temperature=temperature, top_k=top_k)
             for i in range(n)]

@@ -158,3 +158,26 @@ def build_decode_step_slots(model, mesh=None):
         new_index = jnp.where(keep, new_cache["index"], cache["index"])
         return logits, dict(new_cache, index=new_index)
     return decode_step
+
+
+def build_decode_step_slots_paged(model, mesh=None):
+    """Slot-wise decode over a *paged* KV pool (PagedKVCachePool).
+
+    Same contract as ``build_decode_step_slots``, but the cache's K/V are
+    a page pool ``(layers, num_pages, page_size, kv_heads, head_dim)`` and
+    the per-slot ``(num_slots, max_pages)`` int32 page table arrives as an
+    extra argument each step (the pool keeps it on the host so page
+    alloc/free never touches the device).  The model reads and writes K/V
+    through the table; a slot whose table row is zeroed (freed) scatters
+    its dead write into the reserved junk page 0.  Jittable; the engine
+    donates the cache argument only — the page table is tiny and
+    re-uploaded per step.
+    """
+    def decode_step(params, cache, tokens, active, pages):
+        logits, new_cache = model.decode_step(
+            params, dict(cache, pages=pages), tokens, mesh)
+        keep = active.astype(bool)
+        new_index = jnp.where(keep, new_cache["index"], cache["index"])
+        return logits, {"k": new_cache["k"], "v": new_cache["v"],
+                        "index": new_index}
+    return decode_step
