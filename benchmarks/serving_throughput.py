@@ -1,22 +1,31 @@
-"""Serving throughput: scheduling policies x KV memory layouts.
+"""Serving throughput: scheduling policies x KV memory layouts x replicas.
 
-Two comparisons over the same jitted steps and seeded Zipf traces
+Three comparisons over the same jitted steps and seeded Zipf traces
 (heavy-tailed prompt and generation lengths — the regime real serving
 traffic lives in):
 
 1. **static vs continuous** (PR 1): gang scheduling burns decode steps
    waiting for each batch's longest request; continuous batching refills
    freed slots between steps (~2x on the Zipf trace).
-2. **contiguous vs paged KV** (this PR): under the same tuner HBM budget
+2. **contiguous vs paged KV** (PR 2): under the same tuner HBM budget
    — enforced with a deliberately tight benchmark target — the
    contiguous layout reserves slots x max_len worst cases and gets its
    slot count capped, while the paged layout spends the budget on pages
    and admits requests by *actual* tokens: strictly more in flight, and
    fewer HBM bytes per admitted token.
+3. **router vs single engine** (this PR): the same tight-budget Zipf
+   trace through a ``least_loaded`` ``ReplicaRouter`` over ``FLEET``
+   tight replicas vs one tight engine — fleet tok/s, aggregate
+   in-flight, and load imbalance (max/mean peak resident tokens).
 
-``--smoke`` runs a tiny version of the full grid (both layouts x both
-policies) and writes ``BENCH_serving.json`` with tokens/sec and
-HBM-bytes-per-admitted-token per cell, so CI tracks the perf trajectory.
+``--smoke`` runs a tiny version of the full grid and writes
+``BENCH_serving.json`` with tokens/sec and HBM-bytes-per-admitted-token
+per cell plus the fleet metrics, so CI tracks the perf trajectory;
+``--check-baseline`` additionally fails if any cell's throughput
+regressed more than ``REGRESSION_TOLERANCE`` vs the checked-in baseline
+— enforced on deterministic tokens-per-decode-step (the component of
+tok/s the code controls; wall-clock on shared CI runners swings with
+load and is advisory only).
 """
 
 from __future__ import annotations
@@ -31,6 +40,8 @@ MAX_LEN = 128
 N_REQUESTS = 32
 TRACE_SEED = 0
 TIGHT_SLOTS = 3          # contiguous slots the tight target affords
+FLEET = 3                # router replicas in the fleet comparison
+REGRESSION_TOLERANCE = 0.20   # max fractional tok/s drop vs baseline
 ARCH = "deepseek-7b-smoke"
 
 
@@ -83,6 +94,15 @@ def _trace(n: int, engine, max_new: int = 64, seed: int = TRACE_SEED):
     from repro.serving import zipf_trace
     return zipf_trace(n, engine.cfg.vocab_size, max_prompt=48,
                       max_new=max_new, alpha=1.3, seed=seed)
+
+
+def _router(engine, fleet: int = FLEET, policy: str = "least_loaded"):
+    """A fleet of `fleet` replicas of `engine` — the same object repeated,
+    so the jitted steps compile once and only the pools are per-replica
+    (each replica models a host with the engine's full HBM budget)."""
+    from repro.serving import ReplicaRouter
+    return ReplicaRouter([engine] * fleet, policy=policy,
+                         log=lambda *a, **k: None)
 
 
 def _bytes_per_token(engine, stats) -> float:
@@ -143,21 +163,52 @@ def run(report) -> None:
            f"{_bytes_per_token(e_paged, s_paged):.0f} B/admitted-token; "
            f"{s_paged.preemptions} preemptions")
 
+    # --- router over a fleet of tight replicas vs the single engine ------
+    router = _router(e_cont)
+    t0 = time.perf_counter()
+    s_fleet = router.run(ltrace, policy="continuous")
+    t_f = time.perf_counter() - t0
+    steps = max(max(s.decode_steps for s in s_fleet.replica_stats), 1)
+    report("serve_router_least_loaded_fleet",
+           t_f / steps * 1e6,
+           f"{s_fleet.tokens_per_s:.1f} tok/s fleet over "
+           f"{FLEET} replicas (single: {s_cont.tokens_per_s:.1f}); peak "
+           f"{s_fleet.peak_in_flight} in flight "
+           f"({s_fleet.peak_in_flight / max(s_cont.peak_active, 1):.1f}x "
+           f"single); imbalance {s_fleet.imbalance:.2f}; "
+           f"{s_fleet.reroutes} reroutes")
+
 
 def run_smoke(out_path: str = "BENCH_serving.json",
-              n_requests: int = 12, max_new: int = 32) -> dict:
-    """Tiny grid (both layouts x both policies) on the tight-budget target;
-    emits tokens/sec and HBM-bytes-per-admitted-token per cell."""
+              n_requests: int = 12, max_new: int = 32,
+              check_baseline: bool = False) -> dict:
+    """Tiny grid (both layouts x both policies, plus the router fleet) on
+    the tight-budget target; emits tokens/sec and
+    HBM-bytes-per-admitted-token per cell and the fleet metrics.  With
+    ``check_baseline`` the previous ``out_path`` contents gate the run:
+    any cell regressing more than REGRESSION_TOLERANCE in tok/s fails."""
+    baseline = None
+    if check_baseline:
+        if not Path(out_path).exists():
+            # a missing baseline must not silently disable the gate
+            raise SystemExit(f"SMOKE FAIL: --check-baseline but no "
+                             f"checked-in {out_path} to compare against")
+        baseline = json.loads(Path(out_path).read_text())
     tight = _register_tight_target()
     cells = {}
+    single_cont = None
     for layout in ("contiguous", "paged"):
         engine = _engine(layout, target=tight)
+        if layout == "contiguous":
+            single_cont = engine
         reqs = _trace(n_requests, engine, max_new=max_new)
         engine.run(reqs, policy="continuous")     # warm the jit caches
         for policy in ("static", "continuous"):
             stats = engine.run(reqs, policy=policy)
             cells[f"{layout}_{policy}"] = {
                 "tokens_per_s": round(stats.tokens_per_s, 2),
+                "tokens_per_step": round(
+                    stats.generated_tokens / max(stats.decode_steps, 1), 4),
                 "hbm_bytes_per_admitted_token":
                     round(_bytes_per_token(engine, stats), 1),
                 "pool_bytes": _pool_bytes(engine),
@@ -168,25 +219,118 @@ def run_smoke(out_path: str = "BENCH_serving.json",
                 "peak_active": stats.peak_active,
                 "preemptions": stats.preemptions,
             }
+    # router fleet: FLEET tight contiguous replicas, least-loaded routing,
+    # same trace — fleet tok/s, aggregate in-flight, and load imbalance
+    # no extra warm pass: the fleet reuses single_cont's already-warmed
+    # jitted steps (same engine object), and only one pool shape exists
+    router = _router(single_cont)
+    reqs = _trace(n_requests, single_cont, max_new=max_new)
+    fleet = router.run(reqs, policy="continuous")
+    cc = cells["contiguous_continuous"]
+    rounds = max(max(s.decode_steps for s in fleet.replica_stats), 1)
+    cells[f"router_least_loaded_x{FLEET}"] = {
+        "tokens_per_s": round(fleet.tokens_per_s, 2),
+        "tokens_per_step": round(fleet.generated_tokens / rounds, 4),
+        "replicas": FLEET,
+        "route_policy": "least_loaded",
+        "generated_tokens": fleet.generated_tokens,
+        "decode_steps": rounds,               # lockstep rounds, fleet-wide
+        "peak_in_flight": fleet.peak_in_flight,
+        "in_flight_vs_single":
+            round(fleet.peak_in_flight / max(cc["peak_active"], 1), 2),
+        "load_imbalance": round(fleet.imbalance, 4),
+        "reroutes": fleet.reroutes,
+    }
     out = {"arch": ARCH, "target": tight, "n_requests": n_requests,
            "max_len": MAX_LEN, "trace_seed": TRACE_SEED, "cells": cells}
-    Path(out_path).write_text(json.dumps(out, indent=2))
     pc = cells["paged_continuous"]
-    cc = cells["contiguous_continuous"]
-    print(f"wrote {out_path}: paged {pc['tokens_per_s']} tok/s @ "
+    rc = cells[f"router_least_loaded_x{FLEET}"]
+    print(f"paged {pc['tokens_per_s']} tok/s @ "
           f"{pc['hbm_bytes_per_admitted_token']} B/tok, peak "
           f"{pc['peak_active']} | contiguous {cc['tokens_per_s']} tok/s @ "
           f"{cc['hbm_bytes_per_admitted_token']} B/tok, peak "
-          f"{cc['peak_active']}")
-    if not pc["peak_active"] > cc["peak_active"]:
-        raise SystemExit("SMOKE FAIL: paged did not admit more concurrent "
-                         "requests than contiguous in the same budget")
+          f"{cc['peak_active']} | router x{FLEET} {rc['tokens_per_s']} "
+          f"tok/s fleet, peak {rc['peak_in_flight']} "
+          f"({rc['in_flight_vs_single']}x single), imbalance "
+          f"{rc['load_imbalance']}")
+    # gates run BEFORE the write: a failing run must not replace the
+    # checked-in baseline with its own (regressed) numbers
+    try:
+        if not pc["peak_active"] > cc["peak_active"]:
+            raise SystemExit("SMOKE FAIL: paged did not admit more "
+                             "concurrent requests than contiguous in the "
+                             "same budget")
+        if rc["peak_in_flight"] < 2.5 * cc["peak_active"]:
+            raise SystemExit(
+                f"SMOKE FAIL: router fleet held {rc['peak_in_flight']} in "
+                f"flight, < 2.5x the single engine's {cc['peak_active']}")
+        if baseline is not None:
+            _check_regression(baseline, out)
+    except SystemExit:
+        print("fresh cells (NOT written):\n" + json.dumps(cells, indent=2))
+        raise
+    if baseline is not None and \
+            _strip_wall(baseline.get("cells", {})) == _strip_wall(cells):
+        # deterministic metrics are bit-identical: rewriting would only
+        # churn this machine's wall-clock numbers into the tracked file
+        print(f"{out_path} unchanged (deterministic metrics match "
+              f"baseline); not rewritten")
+    else:
+        Path(out_path).write_text(json.dumps(out, indent=2))
+        print(f"wrote {out_path}")
     return out
+
+
+def _strip_wall(cells: dict) -> dict:
+    """Cells without their machine-dependent wall-clock field."""
+    return {n: {k: v for k, v in c.items() if k != "tokens_per_s"}
+            for n, c in cells.items()}
+
+
+def _check_regression(baseline: dict, fresh: dict) -> None:
+    """Fail when a cell's throughput regresses > REGRESSION_TOLERANCE vs
+    the checked-in baseline.
+
+    The *enforced* metric is ``tokens_per_step`` — generated tokens per
+    decode step, the machine-independent component of tok/s: it is
+    deterministic for the fixed trace seed, and it is exactly what a
+    batching/routing regression moves (worse admission or preemption
+    behaviour burns more decode steps for the same tokens).  Wall-clock
+    tok/s swings 2-3x with CI-runner load on these sub-second cells, so
+    it is reported as an advisory only.  Cells that vanished from the
+    grid fail too (a silently dropped comparison is a regression in
+    coverage, not just speed)."""
+    old_cells = baseline.get("cells", {})
+    missing = [n for n in old_cells if n not in fresh["cells"]]
+    if missing:
+        raise SystemExit("SMOKE FAIL: cells missing from fresh run vs "
+                         "checked-in baseline: " + ", ".join(missing))
+    bad = []
+    for name in sorted(old_cells):
+        old, new = old_cells[name], fresh["cells"][name]
+        if "tokens_per_step" not in old:
+            continue   # pre-metric baseline: nothing to enforce yet
+        floor = old["tokens_per_step"] * (1.0 - REGRESSION_TOLERANCE)
+        if new["tokens_per_step"] < floor:
+            bad.append(f"{name}: {new['tokens_per_step']} tokens/step < "
+                       f"{floor:.3f} (baseline {old['tokens_per_step']} "
+                       f"- {REGRESSION_TOLERANCE:.0%})")
+        wall_floor = old["tokens_per_s"] * (1.0 - REGRESSION_TOLERANCE)
+        if new["tokens_per_s"] < wall_floor:
+            print(f"advisory: {name} wall-clock {new['tokens_per_s']} "
+                  f"tok/s below baseline {old['tokens_per_s']} - "
+                  f"{REGRESSION_TOLERANCE:.0%} (not enforced: wall time "
+                  f"tracks runner load, tokens/step tracks the code)")
+    if bad:
+        raise SystemExit("SMOKE FAIL: tokens-per-step regression vs "
+                         "checked-in baseline:\n  " + "\n  ".join(bad))
+    print(f"baseline check OK: {len(old_cells)} cells within "
+          f"{REGRESSION_TOLERANCE:.0%} of checked-in tokens/step")
 
 
 def main():
     if "--smoke" in sys.argv[1:]:
-        run_smoke()
+        run_smoke(check_baseline="--check-baseline" in sys.argv[1:])
         return
 
     def report(name, us, derived=""):

@@ -75,6 +75,7 @@ class ShapeConfig:
     seq_len: int
     global_batch: int
     kind: str                        # train | prefill | decode
+    serve_replicas: int = 1          # serve: engines sharing the HBM budget
 
 
 SHAPES: dict[str, ShapeConfig] = {

@@ -33,6 +33,7 @@ class DeploymentPlan:
     serve_max_len: int = 0                # per-slot KV capacity (serve mode)
     serve_page_size: int = 0              # paged KV: tokens per page
     serve_num_pages: int = 0              # paged KV: pool pages (incl. junk 0)
+    serve_replicas: int = 1               # engines the serve budget is split over
     sharding_fallbacks: list = dataclasses.field(default_factory=list)
     napkin: dict = dataclasses.field(default_factory=dict)
     notes: list = dataclasses.field(default_factory=list)
@@ -61,11 +62,16 @@ class DeploymentPlan:
                  f"  seq parallel    : {self.sequence_parallel}",
                  f"  grad compression: {self.grad_compression}"]
         if self.serve_slots:
+            per = " per replica" if self.serve_replicas > 1 else ""
             lines.append(f"  serve kv pool   : {self.serve_slots} slots "
-                         f"x {self.serve_max_len}")
+                         f"x {self.serve_max_len}{per}")
         if self.serve_num_pages:
+            per = " per replica" if self.serve_replicas > 1 else ""
             lines.append(f"  serve kv pages  : {self.serve_num_pages} pages "
-                         f"x {self.serve_page_size} tokens (paged layout)")
+                         f"x {self.serve_page_size} tokens (paged layout{per})")
+        if self.serve_replicas > 1:
+            lines.append(f"  serve replicas  : {self.serve_replicas} "
+                         f"(HBM budget split per replica)")
         if self.napkin:
             lines.append("  napkin math:")
             for k, v in self.napkin.items():

@@ -186,18 +186,28 @@ def tune(cfg: ModelConfig, shape: ShapeConfig, target: TargetSpec,
             # worst-case (max_len) per admitted request, the paged pool
             # turns the same budget into *pages* so capacity is measured
             # in expected tokens instead of worst cases.
-            budget = 0.85 * target.hbm_bytes - param_bytes / chips
+            #
+            # With `shape.serve_replicas` > 1 the KV budget is split evenly
+            # across N co-resident engines (params are shared weights, so
+            # only the pools divide), every slot/page count below is *per
+            # replica*, and the napkin quotes the fleet-aggregate capacity
+            # — the quantity the ReplicaRouter balances.
+            replicas = max(int(getattr(shape, "serve_replicas", 1) or 1), 1)
+            plan.serve_replicas = replicas
+            budget = (0.85 * target.hbm_bytes - param_bytes / chips) / replicas
+            replica_batch = max(math.ceil(shape.global_batch / replicas), 1)
             per_slot = kv_per_token * shape.seq_len / chips
             cap = max(int(budget // per_slot), 1) if per_slot > 0 else \
-                shape.global_batch
+                replica_batch
             plan.serve_max_len = shape.seq_len
-            plan.serve_slots = max(1, min(shape.global_batch, cap))
+            plan.serve_slots = max(1, min(replica_batch, cap))
+            per = " per replica" if replicas > 1 else ""
             plan.napkin["serve_pool"] = (
                 f"{plan.serve_slots} slots x {shape.seq_len} "
-                f"({plan.serve_slots * per_slot / 1e9:.3f} GB/chip)")
-            if plan.serve_slots < shape.global_batch:
+                f"({plan.serve_slots * per_slot / 1e9:.3f} GB/chip{per})")
+            if plan.serve_slots < replica_batch:
                 plan.notes.append(
-                    f"serve: requested {shape.global_batch} slots exceed the "
+                    f"serve: requested {replica_batch} slots{per} exceed the "
                     f"HBM budget -> pool capped at {plan.serve_slots}")
             # paged layout: same budget buys a page pool.  Pages beyond the
             # requested batch's worst case are pointless, so the pool is
@@ -206,7 +216,7 @@ def tune(cfg: ModelConfig, shape: ShapeConfig, target: TargetSpec,
             # average), not against max_len.
             page_size = min(SERVE_PAGE_SIZE, shape.seq_len)
             page_bytes = kv_per_token * page_size / chips
-            worst_pages = shape.global_batch * \
+            worst_pages = replica_batch * \
                 math.ceil(shape.seq_len / page_size) + 1  # + junk page 0
             budget_pages = max(int(budget // page_bytes), 2) \
                 if page_bytes > 0 else worst_pages
@@ -220,12 +230,21 @@ def tune(cfg: ModelConfig, shape: ShapeConfig, target: TargetSpec,
             plan.napkin["page_size"] = page_size
             plan.napkin["serve_pool_paged"] = (
                 f"{plan.serve_num_pages} pages x {page_size} "
-                f"({plan.serve_num_pages * page_bytes / 1e9:.3f} GB/chip)")
+                f"({plan.serve_num_pages * page_bytes / 1e9:.3f} GB/chip{per})")
             delta = paged_reqs / max(plan.serve_slots, 1) - 1.0
             plan.napkin["serve_capacity_delta"] = (
                 f"contiguous {plan.serve_slots} worst-case reqs vs paged "
                 f"~{paged_reqs} expected-len({expected_len}) reqs "
-                f"({delta:+.0%})")
+                f"({delta:+.0%}){per}")
+            # fleet capacity: what N replicas hold together, in tokens —
+            # the quantity a router's least-loaded policy balances
+            fleet_tokens = replicas * usable_tokens
+            plan.napkin["serve_fleet_tokens"] = fleet_tokens
+            plan.napkin["serve_fleet_capacity"] = (
+                f"{replicas} replica(s) x {usable_tokens} paged tokens = "
+                f"{fleet_tokens} tokens | {replicas} x {plan.serve_slots} "
+                f"contiguous slots = {replicas * plan.serve_slots} "
+                f"worst-case reqs")
 
     # --- long-context sequence parallelism ---
     if shape.kind != "train" and shape.seq_len >= 131072 and \

@@ -45,7 +45,9 @@ def run_command(command: str, job=None, workdir: Path | None = None,
             kv_layout=kw.get("kv-layout", "contiguous"),
             page_size=int(kw.get("page-size", 0)),
             temperature=float(kw.get("temperature", 0.0)),
-            top_k=int(kw.get("top-k", 0)), log=log)
+            top_k=int(kw.get("top-k", 0)),
+            replicas=int(kw.get("replicas", 1)),
+            route_policy=kw.get("route-policy", "least_loaded"), log=log)
     if "lulesh" in name:
         import time
         from repro.models import lulesh

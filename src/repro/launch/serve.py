@@ -27,18 +27,35 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
                mode: str = "continuous", requests: int = 0,
                max_len: int = 0, kv_layout: str = "contiguous",
                page_size: int = 0, temperature: float = 0.0,
-               top_k: int = 0, log=print) -> dict:
+               top_k: int = 0, replicas: int = 1,
+               route_policy: str = "least_loaded", log=print) -> dict:
     """Serve `requests` requests (default: one per slot) of `prefill_len`
     prompts, `decode_tokens` generations each.  Reports per-request latency
-    and aggregate tokens/sec."""
+    and aggregate tokens/sec.  With ``replicas`` > 1 the requests flow
+    through a ``ReplicaRouter`` over N tuner-split engines (``kv_layout``
+    may be comma-separated to mix layouts; ``route_policy`` picks the
+    balancing rule)."""
     cfg = get_config(arch)
     from repro.serving.engine import SERVABLE_FAMILIES
     if cfg.family not in SERVABLE_FAMILIES:
+        if replicas > 1:
+            raise NotImplementedError(
+                f"--replicas needs an engine-servable family "
+                f"{SERVABLE_FAMILIES}; {arch} ({cfg.family}) is served by "
+                f"the legacy static path")
         return _legacy_serve_main(arch, batch, prefill_len, decode_tokens,
                                   target, seed, log)
 
     from repro.serving import ServeEngine, uniform_trace
     pool_len = max_len or (prefill_len + decode_tokens)
+    if replicas > 1:
+        return _router_serve_main(
+            arch=arch, batch=batch, prefill_len=prefill_len,
+            decode_tokens=decode_tokens, target=target, seed=seed,
+            mode=mode, requests=requests, pool_len=pool_len,
+            kv_layout=kv_layout, page_size=page_size,
+            temperature=temperature, top_k=top_k, replicas=replicas,
+            route_policy=route_policy, log=log)
     engine = ServeEngine(arch=arch, target=target, num_slots=batch,
                          max_len=pool_len, seed=seed, kv_layout=kv_layout,
                          page_size=page_size, log=log)
@@ -68,6 +85,49 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
     log(f"[serve] {kv_layout}:{mode}: {out['decode_tok_per_s']:.1f} tok/s "
         f"aggregate, occupancy {stats.occupancy:.0%}, "
         f"peak {stats.peak_active} in flight")
+    return out
+
+
+def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
+                       seed, mode, requests, pool_len, kv_layout, page_size,
+                       temperature, top_k, replicas, route_policy,
+                       log=print) -> dict:
+    """Multi-replica path: ReplicaRouter over N tuner-split engines."""
+    from repro.serving import ReplicaRouter, uniform_trace
+    cfg = get_config(arch)
+    router = ReplicaRouter.build(
+        arch=arch, target=target, replicas=replicas, kv_layout=kv_layout,
+        num_slots=batch, max_len=pool_len, seed=seed, policy=route_policy,
+        page_size=page_size, log=log)
+    n = requests or batch * replicas
+    reqs = uniform_trace(n, cfg.vocab_size, prompt_len=prefill_len,
+                         max_new=decode_tokens, seed=seed,
+                         temperature=temperature, top_k=top_k)
+    stats = router.run(reqs, policy=mode)
+    for r in stats.results:
+        log(f"[serve]   req {r.rid} -> replica "
+            f"{stats.replica_of[r.rid]}: {r.prompt_len}+{len(r.tokens)} "
+            f"tokens, latency {r.latency_s*1e3:.1f}ms")
+    out = {
+        "arch": arch, "batch": batch, "prefill_len": prefill_len,
+        "decode_tokens": decode_tokens, "mode": mode,
+        "kv_layout": kv_layout, "replicas": replicas,
+        "route_policy": route_policy,
+        "requests": len(stats.results),
+        "reroutes": stats.reroutes,
+        "peak_in_flight": stats.peak_in_flight,
+        "imbalance": stats.imbalance,
+        "decode_s": stats.wall_s,
+        "decode_tok_per_s": stats.tokens_per_s,
+        "latency_mean_s": float(np.mean([r.latency_s
+                                         for r in stats.results])),
+        "sample": stats.results[0].tokens[:8],
+        "plan": router.engines[0].plan,
+    }
+    log(f"[serve] {replicas}x{kv_layout}:{route_policy}:{mode}: "
+        f"{out['decode_tok_per_s']:.1f} tok/s fleet, peak "
+        f"{stats.peak_in_flight} in flight, imbalance "
+        f"{stats.imbalance:.2f}")
     return out
 
 
@@ -154,11 +214,19 @@ def main(argv=None):
                    help="number of requests (default: one per slot)")
     p.add_argument("--max-len", type=int, default=0,
                    help="per-slot KV capacity (default: prefill+decode)")
-    p.add_argument("--kv-layout", choices=("contiguous", "paged"),
-                   default="contiguous",
-                   help="KV memory layout: worst-case slots or page table")
+    p.add_argument("--kv-layout", default="contiguous",
+                   help="KV memory layout: contiguous | paged; with "
+                        "--replicas a comma-separated mix cycles over "
+                        "replicas (e.g. paged,contiguous)")
     p.add_argument("--page-size", type=int, default=0,
                    help="tokens per KV page (paged; default: tuner's)")
+    p.add_argument("--replicas", type=int, default=1,
+                   help="serve through a ReplicaRouter over N tuner-split "
+                        "engines (1 = single engine)")
+    p.add_argument("--route-policy",
+                   choices=("round_robin", "least_loaded", "prefix_affinity"),
+                   default="least_loaded",
+                   help="replica routing policy (with --replicas > 1)")
     p.add_argument("--temperature", type=float, default=0.0,
                    help="sampling temperature (0 = greedy)")
     p.add_argument("--top-k", type=int, default=0,
@@ -168,7 +236,8 @@ def main(argv=None):
                decode_tokens=a.decode, mode=a.mode, requests=a.requests,
                max_len=a.max_len, kv_layout=a.kv_layout,
                page_size=a.page_size, temperature=a.temperature,
-               top_k=a.top_k)
+               top_k=a.top_k, replicas=a.replicas,
+               route_policy=a.route_policy)
 
 
 if __name__ == "__main__":

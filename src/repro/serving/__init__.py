@@ -4,17 +4,21 @@ Layered as: KV pool (contiguous ``KVCachePool`` or page-table
 ``PagedKVCachePool`` memory layouts) + ``Scheduler`` (admission,
 in-flight batching, page-pressure preemption, per-request sampling) +
 ``ServeEngine`` facade (tuner-sized pools, jitted steps, ``kv_layout``
-selection).
+selection) + ``ReplicaRouter`` (N engines behind one admission queue
+with pluggable routing policies and overflow re-routing).
 """
 
 from repro.serving.engine import KV_LAYOUTS, SERVABLE_FAMILIES, ServeEngine
 from repro.serving.pool import KVCachePool, PagedKVCachePool, PoolExhausted
+from repro.serving.router import (ROUTE_POLICIES, ReplicaRouter, RouterStats,
+                                  prefix_replica)
 from repro.serving.sampling import make_sampler
 from repro.serving.scheduler import (Request, RequestResult, Scheduler,
                                      ServeStats)
 from repro.serving.trace import uniform_trace, zipf_trace
 
 __all__ = ["ServeEngine", "SERVABLE_FAMILIES", "KV_LAYOUTS", "KVCachePool",
-           "PagedKVCachePool", "PoolExhausted", "Request", "RequestResult",
-           "Scheduler", "ServeStats", "make_sampler", "uniform_trace",
-           "zipf_trace"]
+           "PagedKVCachePool", "PoolExhausted", "ReplicaRouter",
+           "RouterStats", "ROUTE_POLICIES", "prefix_replica", "Request",
+           "RequestResult", "Scheduler", "ServeStats", "make_sampler",
+           "uniform_trace", "zipf_trace"]

@@ -25,6 +25,11 @@ Glues the existing layers together the same way the training driver does:
 ``launch/serve.py`` is a thin CLI over this class; the serving benchmark
 drives both layouts and both policies through engines that share the
 request traces, so every comparison is apples-to-apples.
+
+``replicas`` > 1 declares this engine one of N co-resident replicas
+behind a ``ReplicaRouter``: the tuner splits the HBM budget N ways and
+every pool size above becomes a per-replica figure (the plan's napkin
+additionally quotes the fleet-aggregate ``serve_fleet_capacity``).
 """
 
 from __future__ import annotations
@@ -55,12 +60,19 @@ class ServeEngine:
                  target: str = "local:cpu", num_slots: int = 8,
                  max_len: int = 128, seed: int = 0,
                  eos_id: int | None = None, kv_layout: str = "contiguous",
-                 page_size: int = 0, num_pages: int = 0, log=print):
+                 page_size: int = 0, num_pages: int = 0,
+                 replicas: int = 1, log=print):
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(f"kv_layout {kv_layout!r} not in {KV_LAYOUTS}")
+        if replicas < 1:
+            raise ValueError(f"replicas {replicas} < 1")
+        # `replicas` tells the tuner how many co-resident engines split the
+        # HBM budget (ReplicaRouter fleets); num_slots stays the *per
+        # replica* ask, so the fleet-wide batch is num_slots x replicas
         app = AppSpec(arch=arch, shape="decode_32k",
                       shape_overrides={"seq_len": max_len,
-                                       "global_batch": num_slots},
+                                       "global_batch": num_slots * replicas,
+                                       "serve_replicas": replicas},
                       run=f"serve --engine continuous --kv-layout {kv_layout}")
         cfg = app.model_config
         if cfg.family not in SERVABLE_FAMILIES:
@@ -75,6 +87,7 @@ class ServeEngine:
         result = BuildService().build(app, tgt, lower=False)
         self.plan = result.plan
         self.kv_layout = kv_layout
+        self.replicas = replicas
         self.max_len = self.plan.serve_max_len or max_len
         if kv_layout == "paged":
             # the page pool, not the slot count, is the HBM reservation:
@@ -112,6 +125,7 @@ class ServeEngine:
         self.model = model_for(cfg, remat="none")
         self.mesh = None if tgt.num_chips == 1 else result.mesh
         self.eos_id = eos_id
+        self.seed = seed
         self.log = log
         self.params = init_params(self.model.param_table(),
                                   jax.random.PRNGKey(seed))

@@ -147,6 +147,12 @@ class KVCachePool:
     def num_free(self) -> int:
         return len(self._free)
 
+    @property
+    def free_tokens(self) -> int:
+        """Admittable KV tokens left (contiguous: free worst-case slots) —
+        the load signal a router's least-loaded policy balances."""
+        return self.num_free * self.max_len
+
     def can_admit(self, prompt_len: int, active_slots=()) -> bool:
         """A contiguous slot IS the worst-case reservation: one free slot
         admits any prompt that fits max_len."""
@@ -247,6 +253,12 @@ class PagedKVCachePool:
     @property
     def free_pages(self) -> int:
         return len(self._free_pages)
+
+    @property
+    def free_tokens(self) -> int:
+        """Admittable KV tokens left (paged: free pages worth of tokens,
+        gated on a free page-table row existing at all)."""
+        return self.free_pages * self.page_size if self.num_free else 0
 
     def pages_for(self, n_tokens: int) -> int:
         return math.ceil(n_tokens / self.page_size)

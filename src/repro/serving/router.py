@@ -1,0 +1,333 @@
+"""ReplicaRouter — N serving engines behind one admission queue.
+
+The single-engine stack tunes one KV pool from one HBM budget; the
+north-star traffic level needs the same automatic sizing across a fleet.
+The router fronts N ``ServeEngine`` replicas (mixed KV layouts allowed —
+e.g. two paged and one contiguous) and owns admission:
+
+* every request enters a router-level FIFO;
+* a **routing policy** picks the replica for the queue head among the
+  replicas that can admit it *right now* (``pool.can_admit``):
+
+  - ``round_robin``      — ring order, skipping full replicas;
+  - ``least_loaded``     — the replica with the most free KV *tokens*
+                           (``pool.free_tokens`` — worst-case slots for
+                           contiguous pools, free pages for paged ones);
+  - ``prefix_affinity``  — rendezvous (highest-random-weight) hash of the
+                           prompt prefix, so likely-shared prefixes land
+                           on the same replica and the mapping is *stable
+                           under replica count*: adding a replica only
+                           moves the keys that move to it.
+
+* a replica that cannot take the head does not reject it — the request
+  **waits in the router queue** (overflow queuing) until capacity frees;
+* a replica's ``PoolExhausted``-grade starvation (the sole resident
+  request needs a page the pool cannot supply) **re-routes** instead of
+  rejecting: the scheduler evicts the request
+  (``step(evict_on_starvation=True)``) and the router re-dispatches it,
+  preferring a replica whose pool can actually hold its worst case.
+  Re-prefill resume keeps the token stream exactly as an uninterrupted
+  run would have produced it, so routing never changes output — an N=1
+  router is token-identical to a bare ``ServeEngine``.
+
+The run loop is lockstep and host-driven: each tick dispatches from the
+router queue, then advances every busy replica by one slot-wise decode
+step.  Everything is deterministic for a fixed trace, fleet, and policy.
+
+Replica lists may repeat the *same* ``ServeEngine`` object: each run
+builds a fresh pool + scheduler per replica slot, so duplicates share
+jitted steps and weights (one compile) while keeping independent KV
+state — the cheap way to spin up N homogeneous replicas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.serving.pool import PoolExhausted
+from repro.serving.sampling import K_CAP
+from repro.serving.scheduler import Scheduler, _Entry
+
+ROUTE_POLICIES = ("round_robin", "least_loaded", "prefix_affinity")
+
+
+def prefix_replica(prompt, n_replicas: int, prefix_len: int = 8) -> int:
+    """Rendezvous hash of the prompt prefix over ``n_replicas``.
+
+    Every (prefix, replica) pair gets an independent deterministic score
+    (SHA-256 — stable across processes, unlike ``hash()``); the replica
+    with the highest score wins.  Growing the fleet from N to N+1 only
+    ever moves a prefix *to the new replica*, never between survivors.
+    """
+    if n_replicas < 1:
+        raise ValueError(n_replicas)
+    key = np.asarray(prompt, np.int32)[:prefix_len].tobytes()
+    return max(range(n_replicas), key=lambda i: _affinity_score(key, i))
+
+
+def _affinity_score(key: bytes, replica: int) -> int:
+    h = hashlib.sha256(key + replica.to_bytes(4, "little")).digest()
+    return int.from_bytes(h[:8], "little")
+
+
+@dataclasses.dataclass
+class RouterStats:
+    """Fleet-level drain statistics plus the per-replica breakdown."""
+    results: list                  # merged RequestResults, sorted by rid
+    replica_stats: list            # per-replica ServeStats
+    replica_of: dict               # rid -> index of the completing replica
+    wall_s: float
+    reroutes: int = 0              # starvation evictions re-dispatched
+    peak_in_flight: int = 0        # max concurrent requests, fleet-wide
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(len(r.tokens) for r in self.results)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def imbalance(self) -> float:
+        """Load imbalance: max/mean of per-replica peak resident KV tokens
+        (1.0 = perfectly balanced; only meaningful for N > 1)."""
+        peaks = [s.peak_resident_tokens for s in self.replica_stats]
+        mean = sum(peaks) / max(len(peaks), 1)
+        return max(peaks) / mean if mean > 0 else 1.0
+
+    def summary(self) -> str:
+        per = ", ".join(f"r{i}:{s.generated_tokens}t"
+                        for i, s in enumerate(self.replica_stats))
+        re = f", {self.reroutes} reroutes" if self.reroutes else ""
+        return (f"{len(self.results)} requests over "
+                f"{len(self.replica_stats)} replicas, "
+                f"{self.generated_tokens} tokens in {self.wall_s:.3f}s -> "
+                f"{self.tokens_per_s:.1f} tok/s fleet | peak "
+                f"{self.peak_in_flight} in flight, imbalance "
+                f"{self.imbalance:.2f}{re} | {per}")
+
+
+class ReplicaRouter:
+    """Route request traces across N ``ServeEngine`` replicas."""
+
+    def __init__(self, engines, policy: str = "least_loaded",
+                 prefix_len: int = 8, log=print,
+                 clock=time.perf_counter):
+        engines = list(engines)
+        if not engines:
+            raise ValueError("router needs at least one replica engine")
+        if policy not in ROUTE_POLICIES:
+            raise ValueError(f"policy {policy!r} not in {ROUTE_POLICIES}")
+        names = {e.cfg.name for e in engines}
+        if len(names) > 1:
+            raise ValueError(
+                f"replicas must share one architecture, got {sorted(names)}")
+        lens = {e.max_len for e in engines}
+        if len(lens) > 1:
+            # max_len clamps a request's generation budget at admission
+            # (sticky on the result), so a mixed-max_len fleet would make
+            # output depend on which replica the policy picked
+            raise ValueError(
+                f"replicas must share one max_len, got {sorted(lens)}")
+        # same failure class: eos decides when a stream stops, the seed
+        # decides weights and sampler draws — either differing per replica
+        # would make output depend on the routing decision
+        eos = {e.eos_id for e in engines}
+        if len(eos) > 1:
+            raise ValueError(
+                f"replicas must share one eos_id, got {sorted(map(str, eos))}")
+        seeds = {e.seed for e in engines}
+        if len(seeds) > 1:
+            raise ValueError(
+                f"replicas must share one seed, got {sorted(seeds)}")
+        self.engines = engines
+        self.policy = policy
+        self.prefix_len = prefix_len
+        self.log = log
+        self.clock = clock
+
+    @classmethod
+    def build(cls, arch: str = "deepseek-7b-smoke",
+              target: str = "local:cpu", replicas: int = 2,
+              kv_layout: str = "contiguous", num_slots: int = 8,
+              max_len: int = 128, seed: int = 0, eos_id: int | None = None,
+              policy: str = "least_loaded", page_size: int = 0,
+              num_pages: int = 0, log=print) -> "ReplicaRouter":
+        """Build an N-replica fleet, splitting the tuner budget N ways.
+
+        ``kv_layout`` may be comma-separated (``"paged,contiguous"``) and
+        is cycled across replica slots — one engine is built per distinct
+        layout and *shared* between its slots (jitted steps and weights
+        compile once; pools stay per-replica).
+        """
+        from repro.serving.engine import ServeEngine
+        if replicas < 1:
+            raise ValueError(f"replicas {replicas} < 1")
+        layouts = [l.strip() for l in kv_layout.split(",") if l.strip()]
+        if not layouts:
+            raise ValueError(f"no kv layout in {kv_layout!r}")
+        built: dict[str, object] = {}
+        fleet = []
+        for i in range(replicas):
+            lay = layouts[i % len(layouts)]
+            if lay not in built:
+                built[lay] = ServeEngine(
+                    arch=arch, target=target, num_slots=num_slots,
+                    max_len=max_len, seed=seed, eos_id=eos_id,
+                    kv_layout=lay, page_size=page_size, num_pages=num_pages,
+                    replicas=replicas, log=log)
+            fleet.append(built[lay])
+        return cls(fleet, policy=policy, log=log)
+
+    # -- validation ---------------------------------------------------------
+    def _validate(self, requests, scheds) -> None:
+        """Router-level fail-fast: a request is serveable if *some* replica
+        can ever hold it (the single-engine rules, any-replica quantified)."""
+        for req in requests:
+            if not 0 <= req.top_k <= K_CAP:
+                raise ValueError(
+                    f"request {req.rid}: top_k {req.top_k} not in "
+                    f"[0, {K_CAP}]")
+            if all(len(req.prompt) > s.pool.max_len for s in scheds):
+                raise ValueError(
+                    f"request {req.rid}: prompt ({len(req.prompt)}) does "
+                    f"not fit any replica's max_len")
+            en = _Entry(req)
+            if not any(s.pool.can_ever_serve(s.worst_resident(en))
+                       for s in scheds):
+                raise PoolExhausted(
+                    f"request {req.rid} needs "
+                    f"{min(s.worst_resident(en) for s in scheds)} resident "
+                    f"KV tokens but no replica can ever hold that many")
+
+    # -- policy -------------------------------------------------------------
+    def _pick(self, entry: _Entry, ready: list[int], scheds) -> int:
+        if self.policy == "round_robin":
+            n = len(scheds)
+            ready_set = set(ready)
+            for off in range(n):
+                i = (self._rr + off) % n
+                if i in ready_set:
+                    self._rr = (i + 1) % n
+                    return i
+        if self.policy == "least_loaded":
+            # most free KV tokens wins; ties go to the lowest index
+            return max(ready, key=lambda i: (scheds[i].pool.free_tokens, -i))
+        # prefix_affinity: highest rendezvous score among the admittable —
+        # the preferred replica when it has room, its runner-up otherwise
+        key = np.asarray(entry.req.prompt,
+                         np.int32)[:self.prefix_len].tobytes()
+        return max(ready, key=lambda i: _affinity_score(key, i))
+
+    # -- dispatch ------------------------------------------------------------
+    def _worst_for(self, sched, entry) -> int:
+        """Residency bound used to place `entry` on `sched`'s replica.
+
+        A starvation-evicted (rerouted) entry just proved a pool holding
+        nothing else cannot finish it, so it must land where its FULL
+        remaining generation fits — the optimistic eos bound
+        (``worst_resident`` = pending only) would keep the starved
+        replica "feasible" and let the fleet grind one token per
+        re-prefill bounce instead of re-routing or failing fast."""
+        if entry.rerouted:
+            return min(entry.pending_len + entry.remaining_new() - 1,
+                       sched.pool.max_len)
+        return sched.worst_resident(entry)
+
+    def _dispatch(self, queue: deque, scheds, accepting) -> bool:
+        """Admit from the queue head while some accepting replica has room
+        (head-of-line, like the single-engine scheduler).  Returns whether
+        anything was admitted."""
+        progressed = False
+        while queue:
+            entry = queue[0]
+            feasible = [i for i in accepting
+                        if scheds[i].pool.can_ever_serve(
+                            self._worst_for(scheds[i], entry))]
+            if not any(
+                    s.pool.can_ever_serve(self._worst_for(s, entry))
+                    for s in scheds):
+                raise PoolExhausted(
+                    f"request {entry.req.rid} ({entry.pending_len} resident "
+                    f"tokens) can no longer fit any replica's pool")
+            ready = [i for i in feasible if scheds[i].can_admit(entry)]
+            if not ready:
+                return progressed
+            idx = self._pick(entry, ready, scheds)
+            if not scheds[idx].try_admit(entry):
+                return progressed   # unreachable: `ready` just re-checked
+            queue.popleft()
+            progressed = True
+        return progressed
+
+    # -- main loop -----------------------------------------------------------
+    def run(self, requests, policy: str = "continuous") -> RouterStats:
+        """Drain `requests` across the fleet under scheduling `policy`
+        (``continuous`` refills replicas between steps; ``static`` gang-
+        fills only idle replicas).  Fresh pools per run, like the engine."""
+        requests = list(requests)
+        scheds = [Scheduler(e.make_pool(), e.prefill_fn, e.decode_fn,
+                            eos_id=e.eos_id, policy=policy,
+                            sampler=e.sampler, clock=self.clock)
+                  for e in self.engines]
+        self._validate(requests, scheds)
+        all_greedy = all(r.temperature <= 0 or r.top_k == 1
+                         for r in requests)
+        t0 = self.clock()
+        for s in scheds:
+            s.all_greedy = all_greedy
+            s.reset(t0)
+        for r in requests:
+            r._t_submit = t0
+        queue: deque = deque(_Entry(r) for r in requests)
+        self._rr = 0
+        reroutes = 0
+        peak_in_flight = 0
+        while queue or any(s.active for s in scheds):
+            if policy == "continuous":
+                accepting = list(range(len(scheds)))
+            else:      # static: gang-fill only replicas idle at phase start
+                accepting = [i for i, s in enumerate(scheds) if not s.active]
+            progressed = self._dispatch(queue, scheds, accepting)
+            in_flight = sum(len(s.active) for s in scheds)
+            peak_in_flight = max(peak_in_flight, in_flight)
+            stepped = False
+            for s in scheds:
+                if not s.active:
+                    continue
+                stepped = True
+                # solo page starvation: evict for re-route (front of the
+                # router queue, like a local preemption resume); marked so
+                # dispatch places it by the pessimistic residency bound
+                for en in reversed(s.step(evict_on_starvation=True)):
+                    en.rerouted = True
+                    reroutes += 1
+                    queue.appendleft(en)
+                # ordinary preemptions also resume through the router, so
+                # a request squeezed out of one replica may land on another
+                while s.queue:
+                    queue.appendleft(s.queue.pop())
+            if not stepped and not progressed:
+                en = queue[0]
+                raise PoolExhausted(
+                    f"request {en.req.rid} ({en.pending_len} tokens) cannot "
+                    f"be admitted into an otherwise idle fleet — every "
+                    f"replica's pool is too small for it")
+
+        wall = self.clock() - t0
+        stats = [s.stats() for s in scheds]
+        replica_of = {r.rid: i for i, s in enumerate(stats)
+                      for r in s.results}
+        results = sorted((r for s in stats for r in s.results),
+                         key=lambda r: r.rid)
+        out = RouterStats(results=results, replica_stats=stats,
+                          replica_of=replica_of, wall_s=wall,
+                          reroutes=reroutes, peak_in_flight=peak_in_flight)
+        self.log(f"[route:{self.policy}:{policy}] {out.summary()}")
+        return out

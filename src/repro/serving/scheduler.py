@@ -20,12 +20,25 @@ reproduces its KV state exactly, so preemption never changes the token
 stream (greedy, and sampled too: the sampler keys on request id and
 generation step, not on slot or time).
 
+The preemption victim is the request with the **youngest admission step**;
+two requests admitted in the same step (between the same pair of decode
+iterations) tie-break on the **highest request id** — a property of the
+request, not of queue insertion order, so the victim is deterministic
+however the trace was assembled.
+
 Sampling is per-request: ``Request.temperature`` / ``Request.top_k``
 ride through per-slot vectors into one jitted sampler call per step
 (``serving/sampling.py``); the default (temperature 0) is greedy argmax.
 The loop is host-driven, one slot-wise decode over the whole pool per
 iteration, one device->host sync per step for the sampled tokens.
 Everything is deterministic for a fixed trace.
+
+``run()`` drains a whole trace, but every phase is also exposed as a
+step-wise API (``reset`` / ``try_admit`` / ``admit_from_queue`` / ``step``
+/ ``stats``) so a ``ReplicaRouter`` can drive N schedulers in lockstep,
+routing between them at admission time and catching solo page starvation
+(``step(evict_on_starvation=True)`` hands the evicted entry back for
+re-routing instead of raising).
 """
 
 from __future__ import annotations
@@ -101,9 +114,13 @@ class ServeStats:
 @dataclasses.dataclass
 class _Entry:
     """A queued unit of work: a fresh request, or a preempted one carrying
-    the result it must resume (tokens generated so far)."""
+    the result it must resume (tokens generated so far).  ``rerouted``
+    marks a solo-starvation eviction a router handed back: its pool
+    provably cannot finish the request, so re-dispatch must place it by
+    the pessimistic residency bound even under an optimistic eos."""
     req: Request
     st: RequestResult | None = None
+    rerouted: bool = False
 
     @property
     def pending_len(self) -> int:
@@ -112,12 +129,19 @@ class _Entry:
         n = len(self.req.prompt)
         return n + len(self.st.tokens) if self.st is not None else n
 
+    def remaining_new(self) -> int:
+        """Generation budget left (fresh entries: the full request ask)."""
+        if self.st is None:
+            return self.req.max_new_tokens
+        return self.st.max_new_tokens - len(self.st.tokens)
+
 
 @dataclasses.dataclass
 class _Active:
     req: Request
     st: RequestResult
-    admit_seq: int                # monotone; youngest = preemption victim
+    admit_step: int               # decode step at admission; youngest is
+    #                               the preemption victim, ties by req.rid
 
 
 class Scheduler:
@@ -135,14 +159,65 @@ class Scheduler:
         self.policy = policy
         self.sampler = sampler              # None -> greedy argmax
         self.clock = clock
-        self._admit_seq = 0
-        self._all_greedy = False
+        self.all_greedy = False
+        self.reset()
+
+    # -- step-wise state ----------------------------------------------------
+    def reset(self, t0: float | None = None) -> None:
+        """Fresh drain state (queue, active set, counters, host mirrors)."""
+        S = self.pool.num_slots
+        self.queue: deque = deque()
+        self.active: dict[int, _Active] = {}
+        self.done: list[RequestResult] = []
+        self._last_tokens = np.zeros((S, 1), np.int32)
+        self._active_mask = np.zeros((S,), np.int32)
+        self._steps = 0
+        self._busy = 0
+        self._peak = 0
+        self._peak_resident = 0
+        self._preemptions = 0
+        self._t0 = self.clock() if t0 is None else t0
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)
+
+    def validate(self, requests) -> None:
+        """Reject up front what this pool could never serve: a mid-run
+        rejection would throw away the stats of every request already
+        served in a drain.  Without an eos, generation is deterministic
+        full-length, so a paged request whose worst-case residency
+        outstrips the whole page pool is *guaranteed* to starve.  (With
+        an eos the request might stop early; it is admitted optimistically
+        and the mid-decode starvation path still raises.)"""
+        for req in requests:
+            if len(req.prompt) > self.pool.max_len:
+                raise ValueError(
+                    f"request {req.rid}: prompt ({len(req.prompt)}) does "
+                    f"not fit pool max_len {self.pool.max_len}")
+            if not 0 <= req.top_k <= K_CAP:
+                raise ValueError(
+                    f"request {req.rid}: top_k {req.top_k} not in "
+                    f"[0, {K_CAP}]")
+            worst = self.worst_resident(_Entry(req))
+            if not self.pool.can_ever_serve(worst):
+                raise PoolExhausted(
+                    f"request {req.rid} needs {worst} resident KV tokens "
+                    f"but the pool can never hold that many")
+
+    def worst_resident(self, entry: _Entry) -> int:
+        """Max KV tokens `entry` will hold if admitted here (eos: only the
+        pending prefill is certain; otherwise full-length generation is)."""
+        if self.eos_id is not None:
+            return entry.pending_len
+        return min(entry.pending_len + entry.remaining_new() - 1,
+                   self.pool.max_len)
 
     # -- sampling ----------------------------------------------------------
     def _sample_rows(self, logits_last, entries):
         """One sampler call over rows; entries[i] styles row i (None rows
         sample greedily with a dead key)."""
-        if self.sampler is None or self._all_greedy:
+        if self.sampler is None or self.all_greedy:
             return np.asarray(jnp.argmax(logits_last, axis=-1))
         n = logits_last.shape[0]
         temps = np.zeros((n,), np.float32)
@@ -161,7 +236,22 @@ class Scheduler:
             jnp.asarray(rids), jnp.asarray(steps)))
 
     # -- admission ---------------------------------------------------------
-    def _admit(self, entry: _Entry, active, last_tokens, active_mask, done):
+    def can_admit(self, entry: _Entry) -> bool:
+        return self.pool.can_admit(entry.pending_len, tuple(self.active))
+
+    def try_admit(self, entry: _Entry) -> bool:
+        """Router-facing single-entry admission; False when full."""
+        if not self.can_admit(entry):
+            return False
+        self._admit(entry)
+        return True
+
+    def admit_from_queue(self) -> None:
+        """Admit from the local queue head while the pool has room."""
+        while self.queue and self.can_admit(self.queue[0]):
+            self._admit(self.queue.popleft())
+
+    def _admit(self, entry: _Entry) -> None:
         now = self.clock()
         req = entry.req
         if entry.st is None:
@@ -199,128 +289,122 @@ class Scheduler:
         st.tokens.append(tok)
         if len(st.tokens) >= st.max_new_tokens or tok == self.eos_id:
             st.t_done = self.clock()
-            done.append(st)
+            self.done.append(st)
             return
         slot = self.pool.alloc()
         st.slot = slot
         self.pool.insert(slot, cache)
-        active[slot] = _Active(req, st, self._admit_seq)
-        self._admit_seq += 1
-        last_tokens[slot, 0] = tok
-        active_mask[slot] = 1
+        self.active[slot] = _Active(req, st, self._steps)
+        self._last_tokens[slot, 0] = tok
+        self._active_mask[slot] = 1
 
     # -- preemption --------------------------------------------------------
-    def _preempt(self, slot, active, last_tokens, active_mask, queue):
-        en = active.pop(slot)
+    def _evict(self, slot: int) -> _Entry:
+        """Free `slot` and return its request as a resumable entry."""
+        en = self.active.pop(slot)
         en.st.slot = -1
         en.st.preemptions += 1
-        active_mask[slot] = 0
-        last_tokens[slot, 0] = 0
+        self._active_mask[slot] = 0
+        self._last_tokens[slot, 0] = 0
         self.pool.free(slot)                 # returns its pages
-        queue.appendleft(_Entry(en.req, en.st))
+        return _Entry(en.req, en.st)
+
+    def _preempt(self, slot: int) -> None:
+        self.queue.appendleft(self._evict(slot))
+        self._preemptions += 1
+
+    # -- one decode iteration ----------------------------------------------
+    def step(self, evict_on_starvation: bool = False) -> list:
+        """One slot-wise decode over the active set.
+
+        Paged pools grow slots crossing a page boundary first; starvation
+        preempts the youngest in-flight request (ties by request id) until
+        the step fits.  When the *sole* active request starves the pool can
+        never make progress alone: raise ``PoolExhausted``, or — under a
+        router (``evict_on_starvation``) — hand the evicted entry back for
+        re-routing to a replica that can hold it.  Returns the evicted
+        entries (empty in the single-engine path).
+        """
+        evicted = []
+        while True:
+            starved = self.pool.prepare_decode(sorted(self.active))
+            if not starved:
+                break
+            if len(self.active) == 1:
+                (slot,) = self.active
+                if not evict_on_starvation:
+                    raise PoolExhausted(
+                        f"page starvation mid-decode: request "
+                        f"{self.active[slot].req.rid} holds every page and "
+                        f"still needs another — the page pool is too small "
+                        f"for it")
+                evicted.append(self._evict(slot))
+                self._preemptions += 1
+                return evicted               # nothing left to decode
+            victim = max(self.active,
+                         key=lambda sl: (self.active[sl].admit_step,
+                                         self.active[sl].req.rid))
+            self._preempt(victim)
+        self._peak = max(self._peak, len(self.active))
+        self._peak_resident = max(self._peak_resident,
+                                  int(self.pool.lengths.sum()))
+        logits, new_cache = self.decode_fn(
+            self.pool.cache, jnp.asarray(self._last_tokens),
+            jnp.asarray(self._active_mask), *self.pool.decode_extras())
+        self.pool.update(new_cache, tuple(self.active))
+        self._steps += 1
+        self._busy += len(self.active)
+        S = self.pool.num_slots
+        rows = [self.active.get(i) for i in range(S)]
+        toks = self._sample_rows(logits[:, -1], rows)
+        now = self.clock()
+        for slot, en in list(self.active.items()):
+            st = en.st
+            tok = int(toks[slot])
+            st.tokens.append(tok)
+            self._last_tokens[slot, 0] = tok
+            if len(st.tokens) >= st.max_new_tokens or tok == self.eos_id:
+                st.t_done = now
+                self.done.append(st)
+                del self.active[slot]
+                self._active_mask[slot] = 0
+                self._last_tokens[slot, 0] = 0
+                self.pool.free(slot)
+        return evicted
+
+    # -- results -----------------------------------------------------------
+    def stats(self) -> ServeStats:
+        wall = self.clock() - self._t0
+        done = sorted(self.done, key=lambda r: r.rid)
+        return ServeStats(
+            results=done, wall_s=wall, decode_steps=self._steps,
+            generated_tokens=sum(len(r.tokens) for r in done),
+            occupancy=self._busy / max(self._steps * self.pool.num_slots, 1),
+            peak_active=self._peak, peak_resident_tokens=self._peak_resident,
+            preemptions=self._preemptions)
 
     # -- main loop ---------------------------------------------------------
     def run(self, requests) -> ServeStats:
-        # validate up front: a mid-run rejection would throw away the
-        # stats of every request already served in this drain.  Without an
-        # eos, generation is deterministic full-length, so a paged request
-        # whose worst-case residency outstrips the whole page pool is
-        # *guaranteed* to starve — reject it here instead of mid-decode.
-        # (With an eos the request might stop early; it is admitted
-        # optimistically and the mid-decode starvation path still raises.)
-        for req in requests:
-            if len(req.prompt) > self.pool.max_len:
-                raise ValueError(
-                    f"request {req.rid}: prompt ({len(req.prompt)}) does "
-                    f"not fit pool max_len {self.pool.max_len}")
-            if not 0 <= req.top_k <= K_CAP:
-                raise ValueError(
-                    f"request {req.rid}: top_k {req.top_k} not in "
-                    f"[0, {K_CAP}]")
-            worst = len(req.prompt) if self.eos_id is not None else \
-                min(len(req.prompt) + req.max_new_tokens - 1,
-                    self.pool.max_len)
-            if not self.pool.can_ever_serve(worst):
-                raise PoolExhausted(
-                    f"request {req.rid} needs {worst} resident KV tokens "
-                    f"but the pool can never hold that many")
+        requests = list(requests)
+        self.validate(requests)
         # all-greedy traces skip the sampler (argmax is its temperature-0 /
         # top_k-1 special case, so this is a pure fast path)
-        self._all_greedy = all(r.temperature <= 0 or r.top_k == 1
-                               for r in requests)
-        queue = deque(_Entry(r) for r in requests)
-        done: list[RequestResult] = []
-        active: dict[int, _Active] = {}
-        S = self.pool.num_slots
-        last_tokens = np.zeros((S, 1), np.int32)
-        active_mask = np.zeros((S,), np.int32)
-
-        t0 = self.clock()
-        for en in queue:
-            en.req._t_submit = t0
-        steps = 0
-        busy = 0
-        peak = 0
-        peak_resident = 0
-        preemptions = 0
-        while queue or active:
-            if self.policy == "continuous" or not active:
-                while queue and self.pool.can_admit(queue[0].pending_len,
-                                                    tuple(active)):
-                    self._admit(queue.popleft(), active, last_tokens,
-                                active_mask, done)
-            if not active:
-                if queue:
-                    en = queue[0]
+        self.all_greedy = all(r.temperature <= 0 or r.top_k == 1
+                              for r in requests)
+        self.reset()
+        for r in requests:
+            r._t_submit = self._t0
+            self.queue.append(_Entry(r))
+        while self.has_work:
+            if self.policy == "continuous" or not self.active:
+                self.admit_from_queue()
+            if not self.active:
+                if self.queue:
+                    en = self.queue[0]
                     raise PoolExhausted(
                         f"request {en.req.rid} ({en.pending_len} tokens) "
                         f"cannot be admitted into an otherwise idle pool — "
                         f"the KV pool is too small for it")
                 continue
-            # paged pools grow slots crossing a page boundary; starvation
-            # preempts the youngest in-flight request until the step fits
-            while True:
-                starved = self.pool.prepare_decode(sorted(active))
-                if not starved:
-                    break
-                if len(active) == 1:
-                    (slot,) = active
-                    raise PoolExhausted(
-                        f"page starvation mid-decode: request "
-                        f"{active[slot].req.rid} holds every page and still "
-                        f"needs another — the page pool is too small for it")
-                victim = max(active, key=lambda sl: active[sl].admit_seq)
-                self._preempt(victim, active, last_tokens, active_mask, queue)
-                preemptions += 1
-            peak = max(peak, len(active))
-            peak_resident = max(peak_resident, int(self.pool.lengths.sum()))
-            logits, new_cache = self.decode_fn(
-                self.pool.cache, jnp.asarray(last_tokens),
-                jnp.asarray(active_mask), *self.pool.decode_extras())
-            self.pool.update(new_cache, tuple(active))
-            steps += 1
-            busy += len(active)
-            rows = [active.get(i) for i in range(S)]
-            toks = self._sample_rows(logits[:, -1], rows)
-            now = self.clock()
-            for slot, en in list(active.items()):
-                st = en.st
-                tok = int(toks[slot])
-                st.tokens.append(tok)
-                last_tokens[slot, 0] = tok
-                if len(st.tokens) >= st.max_new_tokens or tok == self.eos_id:
-                    st.t_done = now
-                    done.append(st)
-                    del active[slot]
-                    active_mask[slot] = 0
-                    last_tokens[slot, 0] = 0
-                    self.pool.free(slot)
-
-        wall = self.clock() - t0
-        done.sort(key=lambda r: r.rid)
-        return ServeStats(
-            results=done, wall_s=wall, decode_steps=steps,
-            generated_tokens=sum(len(r.tokens) for r in done),
-            occupancy=busy / max(steps * S, 1),
-            peak_active=peak, peak_resident_tokens=peak_resident,
-            preemptions=preemptions)
+            self.step()
+        return self.stats()

@@ -168,3 +168,57 @@ def test_plan_json_roundtrip():
     assert plan2.mesh_shape == (2, 16, 16)
     assert plan2.optimizer == plan.optimizer
     assert "EASEY tuning report" in plan2.report()
+
+
+# --------------------------------------------------- tuner: replica split
+
+def _serve_plan(replicas: int):
+    from repro.configs.base import ShapeConfig
+    return tune(get_config("deepseek-7b"),
+                ShapeConfig("d", 32768, 4096, "decode",
+                            serve_replicas=replicas),
+                get_target("lrz:tpu-v5e-pod"))
+
+
+def test_tuner_splits_serve_budget_per_replica():
+    """Per-replica slot/page counts shrink as the fleet grows: N replicas
+    share one HBM budget, so each gets ~1/N of the KV pool."""
+    plans = {n: _serve_plan(n) for n in (1, 2, 4)}
+    assert plans[1].serve_replicas == 1 and plans[4].serve_replicas == 4
+    assert plans[1].serve_slots > plans[2].serve_slots > plans[4].serve_slots
+    assert plans[1].serve_num_pages > plans[2].serve_num_pages \
+        > plans[4].serve_num_pages
+    # ~proportional: a 4-way split leaves each replica about a quarter
+    assert plans[4].serve_slots <= plans[1].serve_slots // 4 + 1
+    assert plans[4].serve_num_pages <= plans[1].serve_num_pages // 4 + 1
+
+
+def test_tuner_fleet_capacity_within_a_page_per_replica():
+    """Splitting the budget loses at most rounding: the fleet's aggregate
+    paged capacity stays within one page per replica (plus each replica's
+    own reserved junk page) of the unsplit pool."""
+    single = _serve_plan(1)
+    for n in (2, 4, 8):
+        plan = _serve_plan(n)
+        fleet = plan.napkin["serve_fleet_tokens"]
+        per_replica = (plan.serve_num_pages - 1) * plan.serve_page_size
+        assert fleet == n * per_replica
+        lost = single.napkin["serve_fleet_tokens"] - fleet
+        assert 0 <= lost <= 2 * n * plan.serve_page_size
+
+
+def test_tuner_replica_split_napkin_renders_and_roundtrips():
+    from repro.core.plan import DeploymentPlan
+    plan = _serve_plan(3)
+    for key in ("serve_fleet_capacity", "serve_fleet_tokens", "serve_pool",
+                "serve_pool_paged"):
+        assert key in plan.napkin, key
+    assert "per replica" in plan.napkin["serve_pool"]
+    report = plan.report()
+    assert "serve replicas  : 3" in report
+    assert "serve_fleet_capacity" in report
+    again = DeploymentPlan.from_json(plan.to_json())
+    assert again.serve_replicas == 3
+    assert again.serve_num_pages == plan.serve_num_pages
+    # replicas=1 keeps the original single-engine phrasing
+    assert "per replica" not in _serve_plan(1).napkin["serve_pool"]
