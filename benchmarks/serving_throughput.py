@@ -13,19 +13,30 @@ traffic lives in):
    slot count capped, while the paged layout spends the budget on pages
    and admits requests by *actual* tokens: strictly more in flight, and
    fewer HBM bytes per admitted token.
-3. **router vs single engine** (this PR): the same tight-budget Zipf
+3. **router vs single engine** (PR 3): the same tight-budget Zipf
    trace through a ``least_loaded`` ``ReplicaRouter`` over ``FLEET``
    tight replicas vs one tight engine — fleet tok/s, aggregate
    in-flight, and load imbalance (max/mean peak resident tokens).
+4. **blocking vs chunked prefill** (this PR): a long-prompt-heavy trace
+   (``longprompt_trace`` — the prefill-stall regime) through the same
+   fleet with prompt ingestion blocking at dispatch vs chunked and
+   interleaved with decode ticks.  Compared on the deterministic
+   **TTFT step proxy** (virtual clock: one unit per jitted invocation,
+   blocking prefills priced serially at their chunk-equivalents, round
+   cost = busiest replica) — chunked must be strictly lower.
+
+The layout x policy grid cells run with ``prefill_chunk=0`` (blocking)
+so their decode-step counts stay comparable across baselines; the
+``longprompt_*`` cells carry the chunked-prefill trajectory.
 
 ``--smoke`` runs a tiny version of the full grid and writes
 ``BENCH_serving.json`` with tokens/sec and HBM-bytes-per-admitted-token
 per cell plus the fleet metrics, so CI tracks the perf trajectory;
 ``--check-baseline`` additionally fails if any cell's throughput
 regressed more than ``REGRESSION_TOLERANCE`` vs the checked-in baseline
-— enforced on deterministic tokens-per-decode-step (the component of
-tok/s the code controls; wall-clock on shared CI runners swings with
-load and is advisory only).
+— enforced on deterministic tokens-per-decode-step AND the TTFT step
+proxy (the components of latency/throughput the code controls;
+wall-clock on shared CI runners swings with load and is advisory only).
 """
 
 from __future__ import annotations
@@ -113,6 +124,14 @@ def _bytes_per_token(engine, stats) -> float:
     return _pool_bytes(engine) / max(stats.peak_resident_tokens, 1)
 
 
+def _longprompt(n: int, engine, max_new: int = 8, seed: int = TRACE_SEED):
+    """Prompts clustered near max_len, short generations — the regime
+    where admission-time prefill stalls dominate."""
+    from repro.serving import longprompt_trace
+    return longprompt_trace(n, engine.cfg.vocab_size, max_prompt=MAX_LEN,
+                            max_new=max_new, seed=seed)
+
+
 def run(report) -> None:
     engine = _engine("contiguous")
     reqs = _trace(N_REQUESTS, engine)
@@ -178,6 +197,26 @@ def run(report) -> None:
            f"single); imbalance {s_fleet.imbalance:.2f}; "
            f"{s_fleet.reroutes} reroutes")
 
+    # --- blocking vs chunked prefill on the long-prompt trace ------------
+    ptrace = _longprompt(N_REQUESTS, e_cont)
+    router.run(ptrace, policy="continuous", prefill_chunk=0)      # warm
+    router.run(ptrace, policy="continuous")
+    t0 = time.perf_counter()
+    p_block = router.run(ptrace, policy="continuous", prefill_chunk=0)
+    t_b = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    p_chunk = router.run(ptrace, policy="continuous")
+    t_c2 = time.perf_counter() - t0
+    report("serve_longprompt_router_blocking", t_b * 1e6,
+           f"mean TTFT {p_block.mean_ttft_steps:.1f} vsteps; "
+           f"{p_block.tokens_per_s:.1f} tok/s fleet")
+    report("serve_longprompt_router_chunked", t_c2 * 1e6,
+           f"mean TTFT {p_chunk.mean_ttft_steps:.1f} vsteps "
+           f"({p_block.mean_ttft_steps / max(p_chunk.mean_ttft_steps, 1e-9):.2f}x "
+           f"lower); {p_chunk.tokens_per_s:.1f} tok/s fleet; "
+           f"{p_chunk.prefill_chunks} chunks, "
+           f"{p_chunk.overlap_steps} overlapped ticks")
+
 
 def run_smoke(out_path: str = "BENCH_serving.json",
               n_requests: int = 12, max_new: int = 32,
@@ -202,9 +241,12 @@ def run_smoke(out_path: str = "BENCH_serving.json",
         if layout == "contiguous":
             single_cont = engine
         reqs = _trace(n_requests, engine, max_new=max_new)
-        engine.run(reqs, policy="continuous")     # warm the jit caches
+        engine.run(reqs, policy="continuous", prefill_chunk=0)  # warm jits
         for policy in ("static", "continuous"):
-            stats = engine.run(reqs, policy=policy)
+            # blocking prefill keeps these cells' decode-step counts
+            # comparable with pre-chunking baselines; the longprompt
+            # cells below track the chunked path
+            stats = engine.run(reqs, policy=policy, prefill_chunk=0)
             cells[f"{layout}_{policy}"] = {
                 "tokens_per_s": round(stats.tokens_per_s, 2),
                 "tokens_per_step": round(
@@ -218,6 +260,7 @@ def run_smoke(out_path: str = "BENCH_serving.json",
                 "occupancy": round(stats.occupancy, 4),
                 "peak_active": stats.peak_active,
                 "preemptions": stats.preemptions,
+                "mean_ttft_steps": round(stats.mean_ttft_steps, 4),
             }
     # router fleet: FLEET tight contiguous replicas, least-loaded routing,
     # same trace — fleet tok/s, aggregate in-flight, and load imbalance
@@ -225,7 +268,7 @@ def run_smoke(out_path: str = "BENCH_serving.json",
     # jitted steps (same engine object), and only one pool shape exists
     router = _router(single_cont)
     reqs = _trace(n_requests, single_cont, max_new=max_new)
-    fleet = router.run(reqs, policy="continuous")
+    fleet = router.run(reqs, policy="continuous", prefill_chunk=0)
     cc = cells["contiguous_continuous"]
     rounds = max(max(s.decode_steps for s in fleet.replica_stats), 1)
     cells[f"router_least_loaded_x{FLEET}"] = {
@@ -241,10 +284,41 @@ def run_smoke(out_path: str = "BENCH_serving.json",
         "load_imbalance": round(fleet.imbalance, 4),
         "reroutes": fleet.reroutes,
     }
+    # long-prompt trace, blocking vs chunked prompt ingestion: the TTFT
+    # proxy comparison the chunked-prefill pipeline is judged on
+    ptrace = _longprompt(n_requests, single_cont)
+    # warm BOTH ingestion modes (chunked compiles the small chunk
+    # buckets, blocking the whole-prompt ones) so neither timed cell
+    # pays compilation
+    router.run(ptrace, policy="continuous")
+    router.run(ptrace, policy="continuous", prefill_chunk=0)
+    for name, chunk in (("longprompt_router_blocking", 0),
+                        ("longprompt_router_chunked", None)):
+        stats = router.run(ptrace, policy="continuous", prefill_chunk=chunk)
+        rounds = max(max(s.decode_steps for s in stats.replica_stats), 1)
+        cells[name] = {
+            "tokens_per_s": round(stats.tokens_per_s, 2),
+            "tokens_per_step": round(stats.generated_tokens / rounds, 4),
+            "mean_ttft_steps": round(stats.mean_ttft_steps, 4),
+            "prefill_chunk": (0 if chunk == 0 else
+                              single_cont.prefill_chunk),
+            "prefill_chunks": stats.prefill_chunks,
+            "prefill_compiles": max(
+                s.prefill_compiles for s in stats.replica_stats),
+            "prefill_queue_peak": max(
+                s.prefill_queue_peak for s in stats.replica_stats),
+            "overlap_steps": stats.overlap_steps,
+            "generated_tokens": stats.generated_tokens,
+            "decode_steps": rounds,
+            "replicas": FLEET,
+            "reroutes": stats.reroutes,
+        }
     out = {"arch": ARCH, "target": tight, "n_requests": n_requests,
            "max_len": MAX_LEN, "trace_seed": TRACE_SEED, "cells": cells}
     pc = cells["paged_continuous"]
     rc = cells[f"router_least_loaded_x{FLEET}"]
+    lb = cells["longprompt_router_blocking"]
+    lc = cells["longprompt_router_chunked"]
     print(f"paged {pc['tokens_per_s']} tok/s @ "
           f"{pc['hbm_bytes_per_admitted_token']} B/tok, peak "
           f"{pc['peak_active']} | contiguous {cc['tokens_per_s']} tok/s @ "
@@ -252,7 +326,10 @@ def run_smoke(out_path: str = "BENCH_serving.json",
           f"{cc['peak_active']} | router x{FLEET} {rc['tokens_per_s']} "
           f"tok/s fleet, peak {rc['peak_in_flight']} "
           f"({rc['in_flight_vs_single']}x single), imbalance "
-          f"{rc['load_imbalance']}")
+          f"{rc['load_imbalance']} | longprompt TTFT "
+          f"{lc['mean_ttft_steps']} vsteps chunked vs "
+          f"{lb['mean_ttft_steps']} blocking "
+          f"({lc['overlap_steps']} overlapped ticks)")
     # gates run BEFORE the write: a failing run must not replace the
     # checked-in baseline with its own (regressed) numbers
     try:
@@ -264,6 +341,12 @@ def run_smoke(out_path: str = "BENCH_serving.json",
             raise SystemExit(
                 f"SMOKE FAIL: router fleet held {rc['peak_in_flight']} in "
                 f"flight, < 2.5x the single engine's {cc['peak_active']}")
+        if not lc["mean_ttft_steps"] < lb["mean_ttft_steps"]:
+            raise SystemExit(
+                f"SMOKE FAIL: chunked prefill mean TTFT "
+                f"{lc['mean_ttft_steps']} vsteps is not strictly lower "
+                f"than blocking's {lb['mean_ttft_steps']} on the "
+                f"long-prompt trace")
         if baseline is not None:
             _check_regression(baseline, out)
     except SystemExit:
@@ -315,6 +398,15 @@ def _check_regression(baseline: dict, fresh: dict) -> None:
             bad.append(f"{name}: {new['tokens_per_step']} tokens/step < "
                        f"{floor:.3f} (baseline {old['tokens_per_step']} "
                        f"- {REGRESSION_TOLERANCE:.0%})")
+        # TTFT step proxy is deterministic like tokens/step; LOWER is
+        # better, so the gate is a ceiling
+        if old.get("mean_ttft_steps", 0) > 0:
+            ceiling = old["mean_ttft_steps"] * (1.0 + REGRESSION_TOLERANCE)
+            if new.get("mean_ttft_steps", 0) > ceiling:
+                bad.append(
+                    f"{name}: {new.get('mean_ttft_steps')} TTFT vsteps > "
+                    f"{ceiling:.3f} (baseline {old['mean_ttft_steps']} "
+                    f"+ {REGRESSION_TOLERANCE:.0%})")
         wall_floor = old["tokens_per_s"] * (1.0 - REGRESSION_TOLERANCE)
         if new["tokens_per_s"] < wall_floor:
             print(f"advisory: {name} wall-clock {new['tokens_per_s']} "
@@ -322,10 +414,11 @@ def _check_regression(baseline: dict, fresh: dict) -> None:
                   f"{REGRESSION_TOLERANCE:.0%} (not enforced: wall time "
                   f"tracks runner load, tokens/step tracks the code)")
     if bad:
-        raise SystemExit("SMOKE FAIL: tokens-per-step regression vs "
+        raise SystemExit("SMOKE FAIL: deterministic-metric regression vs "
                          "checked-in baseline:\n  " + "\n  ".join(bad))
     print(f"baseline check OK: {len(old_cells)} cells within "
-          f"{REGRESSION_TOLERANCE:.0%} of checked-in tokens/step")
+          f"{REGRESSION_TOLERANCE:.0%} of checked-in tokens/step + "
+          f"TTFT vsteps")
 
 
 def main():

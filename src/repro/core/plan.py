@@ -34,6 +34,7 @@ class DeploymentPlan:
     serve_page_size: int = 0              # paged KV: tokens per page
     serve_num_pages: int = 0              # paged KV: pool pages (incl. junk 0)
     serve_replicas: int = 1               # engines the serve budget is split over
+    serve_prefill_chunk: int = 0          # prompt tokens ingested per decode tick
     sharding_fallbacks: list = dataclasses.field(default_factory=list)
     napkin: dict = dataclasses.field(default_factory=dict)
     notes: list = dataclasses.field(default_factory=list)
@@ -72,6 +73,9 @@ class DeploymentPlan:
         if self.serve_replicas > 1:
             lines.append(f"  serve replicas  : {self.serve_replicas} "
                          f"(HBM budget split per replica)")
+        if self.serve_prefill_chunk:
+            lines.append(f"  serve prefill   : {self.serve_prefill_chunk} "
+                         f"tokens/chunk interleaved with decode ticks")
         if self.napkin:
             lines.append("  napkin math:")
             for k, v in self.napkin.items():

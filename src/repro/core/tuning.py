@@ -236,6 +236,28 @@ def tune(cfg: ModelConfig, shape: ShapeConfig, target: TargetSpec,
                 f"contiguous {plan.serve_slots} worst-case reqs vs paged "
                 f"~{paged_reqs} expected-len({expected_len}) reqs "
                 f"({delta:+.0%}){per}")
+            # --- chunked-prefill grain + TTFT napkin -----------------------
+            # Prompt ingestion interleaves with decode ticks; the chunk is
+            # sized so one chunk's FLOPs fit inside one decode tick's
+            # budget (decode is bandwidth-bound on the weights, so a tick
+            # costs ~max(param-read time, batch compute) — prefill chunks
+            # ride in that shadow without stretching the tick).  Bucketed
+            # to a power of two so the chunk jit cache stays small.
+            flops_tok = 2 * active_param_count(cfg)
+            t_tick = max(param_bytes / chips / target.hbm_bw,
+                         plan.serve_slots * flops_tok / target.peak_flops)
+            c_raw = t_tick * target.peak_flops / max(flops_tok, 1)
+            chunk = 8
+            while chunk * 2 <= min(c_raw, 128, shape.seq_len):
+                chunk *= 2
+            plan.serve_prefill_chunk = chunk
+            stall = -(-expected_len // chunk)     # chunk-equivalent ticks
+            plan.napkin["serve_prefill_chunk"] = chunk
+            plan.napkin["ttft_estimate"] = (
+                f"expected {expected_len}-token prompt = {stall} chunk(s) "
+                f"x ~{t_tick*1e3:.2f} ms/tick ≈ {stall*t_tick*1e3:.1f} ms "
+                f"to first token; chunked ingest overlaps those ticks "
+                f"with decode, blocking stalls the loop for all of them")
             # fleet capacity: what N replicas hold together, in tokens —
             # the quantity a router's least-loaded policy balances
             fleet_tokens = replicas * usable_tokens

@@ -28,13 +28,16 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
                max_len: int = 0, kv_layout: str = "contiguous",
                page_size: int = 0, temperature: float = 0.0,
                top_k: int = 0, replicas: int = 1,
-               route_policy: str = "least_loaded", log=print) -> dict:
+               route_policy: str = "least_loaded",
+               prefill_chunk: int | None = None, log=print) -> dict:
     """Serve `requests` requests (default: one per slot) of `prefill_len`
     prompts, `decode_tokens` generations each.  Reports per-request latency
     and aggregate tokens/sec.  With ``replicas`` > 1 the requests flow
     through a ``ReplicaRouter`` over N tuner-split engines (``kv_layout``
     may be comma-separated to mix layouts; ``route_policy`` picks the
-    balancing rule)."""
+    balancing rule).  ``prefill_chunk`` sets the prompt-ingestion grain
+    (None: the tuner's ``plan.serve_prefill_chunk``; 0: blocking
+    full-prompt prefill at admission)."""
     cfg = get_config(arch)
     from repro.serving.engine import SERVABLE_FAMILIES
     if cfg.family not in SERVABLE_FAMILIES:
@@ -55,10 +58,11 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
             mode=mode, requests=requests, pool_len=pool_len,
             kv_layout=kv_layout, page_size=page_size,
             temperature=temperature, top_k=top_k, replicas=replicas,
-            route_policy=route_policy, log=log)
+            route_policy=route_policy, prefill_chunk=prefill_chunk, log=log)
     engine = ServeEngine(arch=arch, target=target, num_slots=batch,
                          max_len=pool_len, seed=seed, kv_layout=kv_layout,
-                         page_size=page_size, log=log)
+                         page_size=page_size, prefill_chunk=prefill_chunk,
+                         log=log)
     n = requests or engine.num_slots
     reqs = uniform_trace(n, cfg.vocab_size, prompt_len=prefill_len,
                          max_new=decode_tokens, seed=seed,
@@ -76,6 +80,11 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
         "occupancy": stats.occupancy,
         "peak_active": stats.peak_active,
         "preemptions": stats.preemptions,
+        "prefill_chunks": stats.prefill_chunks,
+        "prefill_compiles": stats.prefill_compiles,
+        "prefill_queue_peak": stats.prefill_queue_peak,
+        "overlap_steps": stats.overlap_steps,
+        "mean_ttft_steps": stats.mean_ttft_steps,
         "decode_s": stats.wall_s,
         "decode_tok_per_s": stats.tokens_per_s,
         "latency_mean_s": float(np.mean([r.latency_s for r in stats.results])),
@@ -91,14 +100,14 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
 def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
                        seed, mode, requests, pool_len, kv_layout, page_size,
                        temperature, top_k, replicas, route_policy,
-                       log=print) -> dict:
+                       prefill_chunk=None, log=print) -> dict:
     """Multi-replica path: ReplicaRouter over N tuner-split engines."""
     from repro.serving import ReplicaRouter, uniform_trace
     cfg = get_config(arch)
     router = ReplicaRouter.build(
         arch=arch, target=target, replicas=replicas, kv_layout=kv_layout,
         num_slots=batch, max_len=pool_len, seed=seed, policy=route_policy,
-        page_size=page_size, log=log)
+        page_size=page_size, prefill_chunk=prefill_chunk, log=log)
     n = requests or batch * replicas
     reqs = uniform_trace(n, cfg.vocab_size, prompt_len=prefill_len,
                          max_new=decode_tokens, seed=seed,
@@ -117,6 +126,9 @@ def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
         "reroutes": stats.reroutes,
         "peak_in_flight": stats.peak_in_flight,
         "imbalance": stats.imbalance,
+        "prefill_chunks": stats.prefill_chunks,
+        "overlap_steps": stats.overlap_steps,
+        "mean_ttft_steps": stats.mean_ttft_steps,
         "decode_s": stats.wall_s,
         "decode_tok_per_s": stats.tokens_per_s,
         "latency_mean_s": float(np.mean([r.latency_s
@@ -227,6 +239,10 @@ def main(argv=None):
                    choices=("round_robin", "least_loaded", "prefix_affinity"),
                    default="least_loaded",
                    help="replica routing policy (with --replicas > 1)")
+    p.add_argument("--prefill-chunk", type=int, default=-1,
+                   help="prompt tokens ingested per decode tick (chunked "
+                        "prefill); -1 = the tuner's plan.serve_prefill_"
+                        "chunk, 0 = blocking full-prompt prefill")
     p.add_argument("--temperature", type=float, default=0.0,
                    help="sampling temperature (0 = greedy)")
     p.add_argument("--top-k", type=int, default=0,
@@ -237,7 +253,9 @@ def main(argv=None):
                max_len=a.max_len, kv_layout=a.kv_layout,
                page_size=a.page_size, temperature=a.temperature,
                top_k=a.top_k, replicas=a.replicas,
-               route_policy=a.route_policy)
+               route_policy=a.route_policy,
+               prefill_chunk=None if a.prefill_chunk < 0
+               else a.prefill_chunk)
 
 
 if __name__ == "__main__":

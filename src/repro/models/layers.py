@@ -230,7 +230,8 @@ def attention(p: dict, x: jax.Array, cfg, mesh, *, positions: jax.Array,
               kv_source: jax.Array | None = None,
               window: int | None = None):
     """mode: 'full' (train / prefill-like, causal unless cross),
-    'prefill' (causal + returns fresh cache), 'decode' (uses cache).
+    'prefill' (causal + returns fresh cache), 'decode' (uses cache),
+    'chunk' (chunked prefill written straight into a serving KV pool).
 
     kv_source: if given, cross-attention (keys/values from encoder output,
     non-causal, no rope on kv positions beyond source positions).
@@ -318,6 +319,58 @@ def attention(p: dict, x: jax.Array, cfg, mesh, *, positions: jax.Array,
             out = dot_attention(q, k_all, v_all, causal=True, q_offset=idx,
                                 kv_len=idx + s)
         new_cache = {"k": k_all, "v": v_all, "index": idx + s}
+    elif mode == "chunk":
+        # CHUNKED PREFILL written straight into the serving pool: x is one
+        # bucketed chunk (batch 1, s tokens at global positions
+        # [offset, offset+s)) of a single request's prompt, and this
+        # layer's cache is the pool's own storage — contiguous
+        # (num_slots, max_len, K, dh) or paged (num_pages, page_size, K,
+        # dh) plus the slot's (max_pages,) page-table row.  The chunk's
+        # K/V scatter to their final resting positions (no intermediate
+        # contiguous (1, s) cache to re-scatter later), then the slot's
+        # whole KV is read back so the chunk attends causally over every
+        # prior chunk through the same indirection decode uses.  Bucket
+        # padding rows (query j >= the true chunk length) write junk only
+        # at positions later chunks / decode overwrite before any mask
+        # admits them; out-of-range rows drop (contiguous) or land in the
+        # reserved junk page 0 (paged).
+        assert cache is not None and not cross
+        slot, off = cache["slot"], cache["offset"]
+        # kv_bound (a STATIC python int >= offset + s) caps the read-back:
+        # a 4-token prompt in a max_len=128 pool attends 4-16 positions,
+        # not 128.  Bounds are bucketed to powers of two host-side so the
+        # jit cache stays (chunk buckets) x (bound buckets).
+        bound = cache["kv_bound"]
+        pos = off + jnp.arange(s)                   # (s,) global positions
+        Kh, dh = k.shape[2], k.shape[3]
+        if "pages_row" in cache:
+            pages_row = cache["pages_row"]          # (max_pages,) int32
+            n_pages, psize = cache["k"].shape[0], cache["k"].shape[1]
+            max_pages = pages_row.shape[0]
+            logical = pos // psize
+            ok = logical < max_pages
+            dest = jnp.take(pages_row, jnp.minimum(logical, max_pages - 1))
+            fpos = jnp.where(ok, dest * psize + pos % psize, pos % psize)
+            k_all = cache["k"].reshape(n_pages * psize, Kh, dh) \
+                .at[fpos].set(k[0]).reshape(n_pages, psize, Kh, dh)
+            v_all = cache["v"].reshape(n_pages * psize, Kh, dh) \
+                .at[fpos].set(v[0]).reshape(n_pages, psize, Kh, dh)
+            B = min(-(-bound // psize), max_pages)
+            kg = jnp.take(k_all, pages_row[:B], axis=0).reshape(
+                1, B * psize, Kh, dh)
+            vg = jnp.take(v_all, pages_row[:B], axis=0).reshape(
+                1, B * psize, Kh, dh)
+        else:
+            k_all = cache["k"].at[slot, pos].set(k[0], mode="drop")
+            v_all = cache["v"].at[slot, pos].set(v[0], mode="drop")
+            L = min(bound, k_all.shape[1])
+            kg = jax.lax.dynamic_slice(
+                k_all, (slot, 0, 0, 0), (1, L, Kh, dh))
+            vg = jax.lax.dynamic_slice(
+                v_all, (slot, 0, 0, 0), (1, L, Kh, dh))
+        out = dot_attention(q, kg, vg, causal=True, q_offset=off,
+                            kv_len=off + s)
+        new_cache = {"k": k_all, "v": v_all}
     else:
         causal = (not cross) and cfg.causal
         if window is not None and s > window and causal:

@@ -188,6 +188,25 @@ class MoELM(DenseLM):
                 new_cache["pages"] = pages
             return x, new_cache
 
+        if mode == "chunk":
+            slot, offset = cache["slot"], cache["offset"]
+            bound = cache["kv_bound"]              # static python int
+            pages_row = cache.get("pages_row")
+
+            def body_c(carry, xs):
+                bp, ck, cv = xs
+                layer_cache = {"k": ck, "v": cv, "slot": slot,
+                               "offset": offset, "kv_bound": bound}
+                if pages_row is not None:
+                    layer_cache["pages_row"] = pages_row
+                y, (nc, _) = self.block_apply(bp, carry, mesh, positions,
+                                              "chunk", layer_cache)
+                return y, (nc["k"], nc["v"])
+
+            x, (nk, nv) = jax.lax.scan(body_c, x,
+                                       (blocks, cache["k"], cache["v"]))
+            return x, {"k": nk, "v": nv}
+
         def body_p(carry, bp):
             y, (nc, _) = self.block_apply(bp, carry, mesh, positions, "prefill", None)
             return y, (nc["k"], nc["v"])

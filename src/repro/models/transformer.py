@@ -147,8 +147,8 @@ class DenseLM(BaseLM):
             x, _ = jax.lax.scan(body, x, blocks)
             return x, None
 
-        # prefill / decode: per-layer cache travels as scan xs -> ys
-        index = cache["index"] if cache is not None else None
+        # prefill / decode / chunk: per-layer cache travels as scan xs -> ys
+        index = cache.get("index") if cache is not None else None
 
         if mode == "decode":
             pages = cache.get("pages")
@@ -176,6 +176,28 @@ class DenseLM(BaseLM):
             if pages is not None:
                 new_cache["pages"] = pages
             return x, new_cache
+
+        if mode == "chunk":
+            # chunked prefill into a serving pool: each scanned layer sees
+            # its own (pool-shaped) K/V slice; slot / offset / the page
+            # table row are layer-invariant and close over the body
+            slot, offset = cache["slot"], cache["offset"]
+            bound = cache["kv_bound"]              # static python int
+            pages_row = cache.get("pages_row")
+
+            def body_c(carry, xs):
+                bp, ck, cv = xs
+                layer_cache = {"k": ck, "v": cv, "slot": slot,
+                               "offset": offset, "kv_bound": bound}
+                if pages_row is not None:
+                    layer_cache["pages_row"] = pages_row
+                y, nc = self.block_apply(bp, carry, mesh, positions,
+                                         "chunk", layer_cache)
+                return y, (nc["k"], nc["v"])
+
+            x, (nk, nv) = jax.lax.scan(body_c, x,
+                                       (blocks, cache["k"], cache["v"]))
+            return x, {"k": nk, "v": nv}
 
         # prefill
         def body_p(carry, bp):
@@ -220,6 +242,40 @@ class DenseLM(BaseLM):
             jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
         logits = self.logits_from(params, x_last, mesh)
         return logits, cache
+
+    def chunk_prefill(self, params, cache, tokens, slot, offset, n_valid,
+                      mesh, kv_bound, pages_row=None):
+        """One prompt chunk of one request, written straight into a KV pool.
+
+        tokens: (1, c) — a bucketed chunk padded past ``n_valid``; global
+        positions are ``[offset, offset + c)``.  ``cache`` is the pool's
+        cache tree (contiguous slot layout or page pool; ``pages_row`` is
+        the slot's page-table row for the latter).  Returns the logits at
+        the chunk's last *valid* position — the next-token logits once the
+        final chunk lands — and the updated pool cache with the slot's
+        index advanced to ``offset + n_valid``.  ``kv_bound`` is a STATIC
+        upper bound (>= offset + c, power-of-two bucketed) on the KV
+        prefix the chunk reads back, so short prompts do not pay
+        max_len-sized attention.  Causality makes the result independent
+        of the bucket padding, and the per-chunk computation is
+        row-identical to one whole-prompt prefill, so a chunked ingest is
+        token-identical to a blocking one.
+        """
+        b, c = tokens.shape
+        positions = offset + jnp.broadcast_to(
+            jnp.arange(c, dtype=jnp.int32), (b, c))
+        x = self.embed_inputs(params, {"tokens": tokens}, mesh, positions)
+        chunk_cache = {"k": cache["k"], "v": cache["v"],
+                       "slot": slot, "offset": offset,
+                       "kv_bound": int(kv_bound)}
+        if pages_row is not None:
+            chunk_cache["pages_row"] = pages_row
+        x, new_kv = self.backbone(params, x, positions, mesh, "chunk",
+                                  cache=chunk_cache)
+        x_last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        logits = self.logits_from(params, x_last, mesh)
+        index = cache["index"].at[slot].set(offset + n_valid)
+        return logits, {"k": new_kv["k"], "v": new_kv["v"], "index": index}
 
     def decode_step(self, params, cache, tokens, mesh):
         b, s = tokens.shape

@@ -10,15 +10,17 @@ with pluggable routing policies and overflow re-routing).
 
 from repro.serving.engine import KV_LAYOUTS, SERVABLE_FAMILIES, ServeEngine
 from repro.serving.pool import KVCachePool, PagedKVCachePool, PoolExhausted
+from repro.serving.prefill import PrefillManager
 from repro.serving.router import (ROUTE_POLICIES, ReplicaRouter, RouterStats,
                                   prefix_replica)
 from repro.serving.sampling import make_sampler
 from repro.serving.scheduler import (Request, RequestResult, Scheduler,
-                                     ServeStats)
-from repro.serving.trace import uniform_trace, zipf_trace
+                                     ServeStats, VirtualClock)
+from repro.serving.trace import longprompt_trace, uniform_trace, zipf_trace
 
 __all__ = ["ServeEngine", "SERVABLE_FAMILIES", "KV_LAYOUTS", "KVCachePool",
-           "PagedKVCachePool", "PoolExhausted", "ReplicaRouter",
-           "RouterStats", "ROUTE_POLICIES", "prefix_replica", "Request",
-           "RequestResult", "Scheduler", "ServeStats", "make_sampler",
+           "PagedKVCachePool", "PoolExhausted", "PrefillManager",
+           "ReplicaRouter", "RouterStats", "ROUTE_POLICIES",
+           "prefix_replica", "Request", "RequestResult", "Scheduler",
+           "ServeStats", "VirtualClock", "make_sampler", "longprompt_trace",
            "uniform_trace", "zipf_trace"]

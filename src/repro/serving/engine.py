@@ -22,6 +22,15 @@ Glues the existing layers together the same way the training driver does:
   requests in the same budget (at the cost of page-pressure preemptions
   when the tail bites).
 
+Prompt ingestion runs through the chunk-prefill step
+(``build_prefill_chunk_step[_paged]``), which scatters each chunk's KV
+straight into pool slots/pages — no intermediate contiguous ``(1, s)``
+cache.  ``prefill_chunk`` picks the grain: the tuner's
+``plan.serve_prefill_chunk`` by default (chunks interleave with decode
+ticks inside ``Scheduler.step``), or 0 for blocking full-prompt prefill
+at admission (the old cadence, kept as the TTFT baseline — both modes
+are token-identical by construction).
+
 ``launch/serve.py`` is a thin CLI over this class; the serving benchmark
 drives both layouts and both policies through engines that share the
 request traces, so every comparison is apples-to-apples.
@@ -47,6 +56,8 @@ from repro.serving.sampling import make_sampler
 from repro.serving.scheduler import Scheduler, ServeStats
 from repro.training.steps import (build_decode_step_slots,
                                   build_decode_step_slots_paged,
+                                  build_prefill_chunk_step,
+                                  build_prefill_chunk_step_paged,
                                   build_prefill_step)
 
 SERVABLE_FAMILIES = ("dense", "moe")
@@ -61,7 +72,8 @@ class ServeEngine:
                  max_len: int = 128, seed: int = 0,
                  eos_id: int | None = None, kv_layout: str = "contiguous",
                  page_size: int = 0, num_pages: int = 0,
-                 replicas: int = 1, log=print):
+                 replicas: int = 1, prefill_chunk: int | None = None,
+                 log=print):
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(f"kv_layout {kv_layout!r} not in {KV_LAYOUTS}")
         if replicas < 1:
@@ -127,6 +139,13 @@ class ServeEngine:
         self.eos_id = eos_id
         self.seed = seed
         self.log = log
+        # prompt-ingestion grain: None -> the tuner's chunk size; 0 ->
+        # blocking full-prompt prefill; >0 -> explicit chunk tokens.
+        # chunk_unit prices blocking prefills on the virtual TTFT clock
+        # in the SAME chunk-equivalents, whatever mode runs.
+        self.chunk_unit = self.plan.serve_prefill_chunk or 16
+        self.prefill_chunk = self.chunk_unit if prefill_chunk is None \
+            else prefill_chunk
         self.params = init_params(self.model.param_table(),
                                   jax.random.PRNGKey(seed))
         self.sampler = make_sampler(seed)
@@ -134,9 +153,15 @@ class ServeEngine:
         self._prefill = jax.jit(prefill)
         if kv_layout == "paged":
             decode = build_decode_step_slots_paged(self.model, self.mesh)
+            chunk = build_prefill_chunk_step_paged(self.model, self.mesh)
         else:
             decode = build_decode_step_slots(self.model, self.mesh)
+            chunk = build_prefill_chunk_step(self.model, self.mesh)
         self._decode = jax.jit(decode, donate_argnums=(1,))
+        # kv_bound (arg 6) is static: it sizes the chunk's KV read-back,
+        # so the chunk jit cache is (chunk buckets) x (bound buckets)
+        self._chunk = jax.jit(chunk, donate_argnums=(1,),
+                              static_argnums=(6,))
 
     # -- step wrappers bound to the params ---------------------------------
     def prefill_fn(self, tokens: jax.Array, last: int | None = None):
@@ -148,6 +173,11 @@ class ServeEngine:
     def decode_fn(self, cache, tokens, active, *extras):
         return self._decode(self.params, cache, tokens, active, *extras)
 
+    def chunk_fn(self, cache, tokens, slot, offset, n_valid, *extras):
+        """Prefill one prompt chunk straight into the pool cache (donated)."""
+        return self._chunk(self.params, cache, tokens, slot, offset,
+                           n_valid, *extras)
+
     # -- driving -----------------------------------------------------------
     def make_pool(self):
         if self.kv_layout == "paged":
@@ -156,15 +186,22 @@ class ServeEngine:
                                     num_pages=self.num_pages)
         return KVCachePool(self.model, self.num_slots, self.max_len)
 
-    def run(self, requests, policy: str = "continuous") -> ServeStats:
+    def run(self, requests, policy: str = "continuous",
+            prefill_chunk: int | None = None) -> ServeStats:
         """Drain `requests` under `policy` ('continuous' | 'static').
 
         A fresh pool per run keeps back-to-back policy comparisons honest
         (same cold cache state; jitted steps stay warm across runs).
+        ``prefill_chunk`` overrides the engine's ingestion grain for this
+        run (0 = blocking full-prompt prefill) — chunked and blocking
+        runs share every jitted step, so the comparison is free.
         """
+        chunk = self.prefill_chunk if prefill_chunk is None else prefill_chunk
         sched = Scheduler(self.make_pool(), self.prefill_fn, self.decode_fn,
                           eos_id=self.eos_id, policy=policy,
-                          sampler=self.sampler)
+                          sampler=self.sampler, chunk_step_fn=self.chunk_fn,
+                          prefill_chunk=chunk,
+                          prefill_chunk_unit=self.chunk_unit)
         stats = sched.run(list(requests))
         self.log(f"[serve:{self.kv_layout}:{policy}] {stats.summary()}")
         return stats

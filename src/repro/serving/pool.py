@@ -180,13 +180,41 @@ class KVCachePool:
 
     # -- cache plumbing ----------------------------------------------------
     def insert(self, slot: int, prefill_cache: dict) -> None:
-        """Scatter a (batch=1) prefill cache into `slot` positions [0, s)."""
+        """Scatter a (batch=1) prefill cache into `slot` positions [0, s).
+
+        Legacy/test path: the serving engine now writes prompt KV straight
+        into the pool from the chunked prefill step (``reserve_prefix`` +
+        ``adopt``) and never materializes this intermediate cache."""
         pk, pv = prefill_cache["k"], prefill_cache["v"]
         s = pk.shape[2]
         if s > self.max_len:
             raise ValueError(f"prefill length {s} > pool max_len {self.max_len}")
         self.cache = _scatter_insert(self.cache, jnp.int32(slot), pk, pv)
         self.lengths[slot] = s
+
+    def reserve_prefix(self, slot: int, n_tokens: int) -> None:
+        """Reserve room for an `n_tokens` prompt before chunked prefill
+        (contiguous: a slot IS the reservation — just bounds-check)."""
+        if n_tokens > self.max_len:
+            raise ValueError(
+                f"prefix of {n_tokens} tokens > pool max_len {self.max_len}")
+
+    def chunk_extras(self, slot: int) -> tuple:
+        """Extra per-chunk arguments for the jitted chunk-prefill step."""
+        return ()
+
+    @property
+    def kv_bound_cap(self) -> int:
+        """Largest KV prefix a chunk could ever need to read back."""
+        return self.max_len
+
+    def adopt(self, new_cache: dict) -> None:
+        """Take ownership of the cache returned by a (donating) chunk
+        step; the host length mirror advances via ``set_length``."""
+        self.cache = new_cache
+
+    def set_length(self, slot: int, n_tokens: int) -> None:
+        self.lengths[slot] = n_tokens
 
     def prepare_decode(self, active_slots) -> list:
         """Contiguous slots never grow — nothing can starve."""
@@ -313,22 +341,52 @@ class PagedKVCachePool:
 
     # -- cache plumbing ----------------------------------------------------
     def insert(self, slot: int, prefill_cache: dict) -> None:
-        """Allocate pages for a (batch=1) prefill cache and scatter it in."""
+        """Allocate pages for a (batch=1) prefill cache and scatter it in.
+
+        Legacy/test path — it costs one extra copy of the prompt's KV:
+        the contiguous ``(1, s)`` cache is materialized by the prefill
+        step and then re-scattered through the page table.  The serving
+        engine now writes through ``reserve_prefix`` + the chunked
+        prefill step, which scatters each chunk's KV to its final
+        page/offset directly."""
         pk, pv = prefill_cache["k"], prefill_cache["v"]
         s = pk.shape[2]
         if s > self.max_len:
             raise ValueError(f"prefill length {s} > pool max_len {self.max_len}")
-        need = self.pages_for(s)
-        if need > self.free_pages:
-            raise PoolExhausted(
-                f"prefill of {s} tokens needs {need} pages, "
-                f"{self.free_pages} free")
-        for _ in range(need - int(self._pages_held[slot])):
-            self._grow(slot)
+        self.reserve_prefix(slot, s)
         self.cache = _scatter_insert_paged(
             self.cache, jnp.int32(slot),
             jnp.asarray(self.page_table[slot]), pk, pv)
         self.lengths[slot] = s
+
+    def reserve_prefix(self, slot: int, n_tokens: int) -> None:
+        """Grow `slot` to hold an `n_tokens` prompt before chunked prefill
+        writes into it (all pages up front — the same reservation point
+        blocking admission used, so admission order is unchanged)."""
+        if n_tokens > self.max_len:
+            raise ValueError(
+                f"prefix of {n_tokens} tokens > pool max_len {self.max_len}")
+        need = self.pages_for(n_tokens)
+        if need - int(self._pages_held[slot]) > self.free_pages:
+            raise PoolExhausted(
+                f"prefix of {n_tokens} tokens needs {need} pages, "
+                f"{self.free_pages} free")
+        for _ in range(need - int(self._pages_held[slot])):
+            self._grow(slot)
+
+    def chunk_extras(self, slot: int) -> tuple:
+        """The slot's page-table row — the chunk step scatters through it."""
+        return (jnp.asarray(self.page_table[slot]),)
+
+    @property
+    def kv_bound_cap(self) -> int:
+        return self.max_pages * self.page_size
+
+    def adopt(self, new_cache: dict) -> None:
+        self.cache = new_cache
+
+    def set_length(self, slot: int, n_tokens: int) -> None:
+        self.lengths[slot] = n_tokens
 
     def prepare_decode(self, active_slots) -> list:
         """Grow every active slot whose next token crosses into a fresh

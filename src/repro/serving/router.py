@@ -21,6 +21,16 @@ e.g. two paged and one contiguous) and owns admission:
 
 * a replica that cannot take the head does not reject it — the request
   **waits in the router queue** (overflow queuing) until capacity frees;
+* with chunked prefill (the engine default), dispatch only *reserves* a
+  replica's slot/pages and queues the prompt's chunks there: the replica
+  ingests at most one chunk budget per lockstep round while still taking
+  its decode tick, so replica A's prompt ingestion overlaps B/C's decode
+  — the serialization the blocking lockstep loop suffered (every
+  admission ran its whole prefill on the driver thread before any
+  replica could step) is gone.  ``least_loaded`` charges a replica's
+  queued-but-unprocessed chunk backlog against its free tokens
+  (``Scheduler.free_tokens``), so a mid-ingest replica stops looking as
+  free as an idle one;
 * a replica's ``PoolExhausted``-grade starvation (the sole resident
   request needs a page the pool cannot supply) **re-routes** instead of
   rejecting: the scheduler evicts the request
@@ -51,7 +61,8 @@ import numpy as np
 
 from repro.serving.pool import PoolExhausted
 from repro.serving.sampling import K_CAP
-from repro.serving.scheduler import Scheduler, _Entry
+from repro.serving.scheduler import (RoundClock, Scheduler, VirtualClock,
+                                     _Entry)
 
 ROUTE_POLICIES = ("round_robin", "least_loaded", "prefix_affinity")
 
@@ -100,6 +111,24 @@ class RouterStats:
         peaks = [s.peak_resident_tokens for s in self.replica_stats]
         mean = sum(peaks) / max(len(peaks), 1)
         return max(peaks) / mean if mean > 0 else 1.0
+
+    @property
+    def mean_ttft_steps(self) -> float:
+        """Mean time-to-first-token on the fleet's shared virtual step
+        clock — the deterministic proxy blocking-vs-chunked prefill is
+        compared on."""
+        ttfts = [r.ttft_steps for r in self.results if r.v_first >= 0]
+        return float(np.mean(ttfts)) if ttfts else 0.0
+
+    @property
+    def prefill_chunks(self) -> int:
+        return sum(s.prefill_chunks for s in self.replica_stats)
+
+    @property
+    def overlap_steps(self) -> int:
+        """Scheduler ticks, fleet-wide, that ingested a prompt chunk AND
+        decoded — the overlap chunked prefill exists to create."""
+        return sum(s.overlap_steps for s in self.replica_stats)
 
     def summary(self) -> str:
         per = ", ".join(f"r{i}:{s.generated_tokens}t"
@@ -158,7 +187,8 @@ class ReplicaRouter:
               kv_layout: str = "contiguous", num_slots: int = 8,
               max_len: int = 128, seed: int = 0, eos_id: int | None = None,
               policy: str = "least_loaded", page_size: int = 0,
-              num_pages: int = 0, log=print) -> "ReplicaRouter":
+              num_pages: int = 0, prefill_chunk: int | None = None,
+              log=print) -> "ReplicaRouter":
         """Build an N-replica fleet, splitting the tuner budget N ways.
 
         ``kv_layout`` may be comma-separated (``"paged,contiguous"``) and
@@ -181,7 +211,7 @@ class ReplicaRouter:
                     arch=arch, target=target, num_slots=num_slots,
                     max_len=max_len, seed=seed, eos_id=eos_id,
                     kv_layout=lay, page_size=page_size, num_pages=num_pages,
-                    replicas=replicas, log=log)
+                    replicas=replicas, prefill_chunk=prefill_chunk, log=log)
             fleet.append(built[lay])
         return cls(fleet, policy=policy, log=log)
 
@@ -217,8 +247,11 @@ class ReplicaRouter:
                     self._rr = (i + 1) % n
                     return i
         if self.policy == "least_loaded":
-            # most free KV tokens wins; ties go to the lowest index
-            return max(ready, key=lambda i: (scheds[i].pool.free_tokens, -i))
+            # most free KV tokens wins; ties go to the lowest index.  The
+            # scheduler-level figure charges a replica's queued prefill
+            # chunks against its pool capacity, so a replica mid-ingest
+            # does not masquerade as free
+            return max(ready, key=lambda i: (scheds[i].free_tokens, -i))
         # prefix_affinity: highest rendezvous score among the admittable —
         # the preferred replica when it has room, its runner-up otherwise
         key = np.asarray(entry.req.prompt,
@@ -267,14 +300,34 @@ class ReplicaRouter:
         return progressed
 
     # -- main loop -----------------------------------------------------------
-    def run(self, requests, policy: str = "continuous") -> RouterStats:
+    def run(self, requests, policy: str = "continuous",
+            prefill_chunk: int | None = None) -> RouterStats:
         """Drain `requests` across the fleet under scheduling `policy`
         (``continuous`` refills replicas between steps; ``static`` gang-
-        fills only idle replicas).  Fresh pools per run, like the engine."""
+        fills only idle replicas).  Fresh pools per run, like the engine.
+
+        ``prefill_chunk`` overrides every replica's prompt-ingestion
+        grain (None: each engine's own setting; 0: blocking full-prompt
+        prefill at dispatch — the old fleet-stalling cadence, kept as
+        the TTFT baseline).
+
+        The fleet shares one virtual step clock: blocking prefills at
+        dispatch advance it serially (they run one after another on the
+        driver thread, stalling every replica), while each round's
+        parallel work advances it by the busiest replica's invocation
+        count — replicas are independent hosts, so a round costs the max,
+        not the sum."""
         requests = list(requests)
+        shared = VirtualClock()
         scheds = [Scheduler(e.make_pool(), e.prefill_fn, e.decode_fn,
                             eos_id=e.eos_id, policy=policy,
-                            sampler=e.sampler, clock=self.clock)
+                            sampler=e.sampler, clock=self.clock,
+                            chunk_step_fn=getattr(e, "chunk_fn", None),
+                            prefill_chunk=(getattr(e, "prefill_chunk", 0)
+                                           if prefill_chunk is None
+                                           else prefill_chunk),
+                            prefill_chunk_unit=getattr(e, "chunk_unit", 16),
+                            vclock=RoundClock(shared))
                   for e in self.engines]
         self._validate(requests, scheds)
         all_greedy = all(r.temperature <= 0 or r.top_k == 1
@@ -289,17 +342,22 @@ class ReplicaRouter:
         self._rr = 0
         reroutes = 0
         peak_in_flight = 0
-        while queue or any(s.active for s in scheds):
+        while queue or any(s.active or s.prefill_backlog for s in scheds):
             if policy == "continuous":
                 accepting = list(range(len(scheds)))
             else:      # static: gang-fill only replicas idle at phase start
-                accepting = [i for i, s in enumerate(scheds) if not s.active]
+                # (mid-prefill counts as busy — its gang is still forming)
+                accepting = [i for i, s in enumerate(scheds)
+                             if not (s.active or s.prefill_backlog)]
             progressed = self._dispatch(queue, scheds, accepting)
-            in_flight = sum(len(s.active) for s in scheds)
+            in_flight = sum(s.in_flight for s in scheds)
             peak_in_flight = max(peak_in_flight, in_flight)
             stepped = False
             for s in scheds:
-                if not s.active:
+                # a replica mid-prefill still takes its tick: it ingests
+                # the next chunk AND decodes its active slots — prompt
+                # ingestion on one replica no longer stalls the others
+                if not (s.active or s.prefill_backlog):
                     continue
                 stepped = True
                 # solo page starvation: evict for re-route (front of the
@@ -313,6 +371,8 @@ class ReplicaRouter:
                 # a request squeezed out of one replica may land on another
                 while s.queue:
                     queue.appendleft(s.queue.pop())
+            # the round costs what the busiest replica did this round
+            shared.advance(max((s.vclock.take() for s in scheds), default=0))
             if not stepped and not progressed:
                 en = queue[0]
                 raise PoolExhausted(

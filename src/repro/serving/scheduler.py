@@ -39,6 +39,28 @@ step-wise API (``reset`` / ``try_admit`` / ``admit_from_queue`` / ``step``
 routing between them at admission time and catching solo page starvation
 (``step(evict_on_starvation=True)`` hands the evicted entry back for
 re-routing instead of raising).
+
+**Prefill** has two modes (``chunk_step_fn`` + ``prefill_chunk``):
+
+* ``prefill_chunk == 0`` — *blocking*: the whole (bucketed) prompt runs
+  as one chunk inline at admission, exactly the old cadence — but the
+  chunk step scatters its KV straight into pool slots/pages, so even
+  this path no longer materializes a contiguous ``(1, s)`` cache for
+  ``insert`` to re-scatter.
+* ``prefill_chunk > 0`` — *chunked*: admission reserves the slot and the
+  prompt's pages, queues a ``PrefillJob``, and ``step`` interleaves at
+  most ``prefill_chunk`` prompt tokens between decode ticks — in-flight
+  requests keep streaming while a prompt is ingested.
+
+With no ``chunk_step_fn`` the legacy path (``prefill_fn`` + pool
+``insert``) is used unchanged.
+
+TTFT is additionally tracked on a **virtual step clock** — a
+deterministic wall-time proxy where every jitted model invocation
+(decode tick, or one prefill chunk) costs one unit, and a blocking
+prefill costs its chunk-equivalent ``ceil(n / chunk)`` *serially* (it
+runs on the driver thread and stalls the loop — fleet-wide under the
+lockstep router, which is exactly the stall chunking removes).
 """
 
 from __future__ import annotations
@@ -51,7 +73,58 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.pool import PoolExhausted
+from repro.serving.prefill import PrefillManager
 from repro.serving.sampling import K_CAP
+
+
+class VirtualClock:
+    """Deterministic step-count clock for the TTFT proxy: one unit per
+    jitted model invocation.  ``advance_serial`` marks driver-thread work
+    that stalls everyone (a blocking prefill at dispatch); on the plain
+    clock it is the same as ``advance`` — the router's per-replica round
+    view distinguishes the two."""
+
+    def __init__(self):
+        self._t = 0
+
+    @property
+    def t(self) -> int:
+        return self._t
+
+    def advance(self, n: int = 1) -> None:
+        self._t += int(n)
+
+    advance_serial = advance
+
+
+class RoundClock:
+    """A replica's view of a shared fleet clock during one lockstep round.
+
+    Parallel-phase work (``advance``: decode ticks, prefill chunks)
+    accumulates a local offset — at the end of the round the router
+    advances the shared clock by the *max* offset across replicas, since
+    real replicas work concurrently.  Serial-phase work
+    (``advance_serial``: blocking prefill during dispatch) goes straight
+    to the shared clock — the driver thread runs those one after another,
+    stalling every replica's round."""
+
+    def __init__(self, shared: VirtualClock):
+        self.shared = shared
+        self.offset = 0
+
+    @property
+    def t(self) -> int:
+        return self.shared.t + self.offset
+
+    def advance(self, n: int = 1) -> None:
+        self.offset += int(n)
+
+    def advance_serial(self, n: int = 1) -> None:
+        self.shared.advance(n)
+
+    def take(self) -> int:
+        off, self.offset = self.offset, 0
+        return off
 
 
 @dataclasses.dataclass
@@ -75,6 +148,10 @@ class RequestResult:
     t_admit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    # virtual-step stamps (deterministic TTFT proxy; -1 = never reached)
+    v_submit: int = 0
+    v_first: int = -1
+    v_done: int = -1
 
     @property
     def latency_s(self) -> float:
@@ -83,6 +160,12 @@ class RequestResult:
     @property
     def ttft_s(self) -> float:
         return self.t_first - self.t_submit
+
+    @property
+    def ttft_steps(self) -> int:
+        """Time-to-first-token on the virtual step clock — deterministic
+        for a fixed trace/fleet/policy, unlike wall-clock ttft_s."""
+        return self.v_first - self.v_submit
 
 
 @dataclasses.dataclass
@@ -95,6 +178,13 @@ class ServeStats:
     peak_active: int = 0          # max concurrent in-flight requests
     peak_resident_tokens: int = 0  # max KV tokens held across the pool
     preemptions: int = 0          # page-pressure evictions (paged pools)
+    # chunked-prefill observability (zeros on the legacy prefill path)
+    prefill_chunks: int = 0       # chunk-step invocations
+    prefill_tokens: int = 0       # prompt tokens ingested through chunks
+    prefill_compiles: int = 0     # distinct chunk buckets jitted
+    prefill_queue_peak: int = 0   # max requests mid-prefill at once
+    overlap_steps: int = 0        # steps that both chunked AND decoded
+    mean_ttft_steps: float = 0.0  # mean virtual-clock time to first token
 
     @property
     def tokens_per_s(self) -> float:
@@ -149,16 +239,27 @@ class Scheduler:
 
     def __init__(self, pool, prefill_fn, decode_fn,
                  eos_id: int | None = None, policy: str = "continuous",
-                 sampler=None, clock=time.perf_counter):
+                 sampler=None, clock=time.perf_counter,
+                 chunk_step_fn=None, prefill_chunk: int = 0,
+                 prefill_chunk_unit: int = 16, vclock=None):
         if policy not in ("continuous", "static"):
             raise ValueError(policy)
+        if prefill_chunk < 0 or prefill_chunk_unit < 1:
+            raise ValueError((prefill_chunk, prefill_chunk_unit))
         self.pool = pool
         self.prefill_fn = prefill_fn        # (tokens (1,s)) -> logits, cache
         self.decode_fn = decode_fn          # (cache, tokens, active, *extras)
+        self.chunk_step_fn = chunk_step_fn  # (cache, toks, slot, off, n, *x)
+        self.prefill_chunk = prefill_chunk  # 0 = blocking full-prompt
+        # chunk_unit prices a blocking prefill on the virtual clock (its
+        # ceil(n/unit) chunk-equivalents) so blocking-vs-chunked TTFT is
+        # compared in the same work units
+        self.chunk_unit = prefill_chunk_unit
         self.eos_id = eos_id
         self.policy = policy
         self.sampler = sampler              # None -> greedy argmax
         self.clock = clock
+        self.vclock = vclock or VirtualClock()
         self.all_greedy = False
         self.reset()
 
@@ -176,11 +277,37 @@ class Scheduler:
         self._peak = 0
         self._peak_resident = 0
         self._preemptions = 0
+        self._overlap = 0
         self._t0 = self.clock() if t0 is None else t0
+        self._v0 = self.vclock.t           # virtual submission time
+        self._mgr = None if self.chunk_step_fn is None else \
+            PrefillManager(self.pool, self.chunk_step_fn, self.prefill_chunk)
 
     @property
     def has_work(self) -> bool:
-        return bool(self.queue or self.active)
+        return bool(self.queue or self.active or self.prefill_backlog)
+
+    @property
+    def prefill_backlog(self) -> bool:
+        """Whether requests are mid-prefill (chunks still queued)."""
+        return self._mgr is not None and self._mgr.has_jobs
+
+    @property
+    def in_flight(self) -> int:
+        """Requests holding pool resources: actively decoding ones plus
+        those mid-prefill (slot and pages reserved, chunks queued)."""
+        jobs = len(self._mgr.jobs) if self._mgr is not None else 0
+        return len(self.active) + jobs
+
+    @property
+    def free_tokens(self) -> int:
+        """Router load signal: the pool's admittable tokens minus the
+        prefill backlog still owed to it.  A replica mid-ingest has the
+        HBM reserved but the compute pending — counting its queued
+        chunks as free capacity would route new prompts straight into
+        the stall chunking exists to hide."""
+        backlog = self._mgr.pending_tokens if self._mgr is not None else 0
+        return max(self.pool.free_tokens - backlog, 0)
 
     def validate(self, requests) -> None:
         """Reject up front what this pool could never serve: a mid-run
@@ -260,18 +387,34 @@ class Scheduler:
             st = RequestResult(
                 rid=req.rid, prompt_len=s,
                 max_new_tokens=min(req.max_new_tokens, budget),
-                t_submit=getattr(req, "_t_submit", now))
+                t_submit=getattr(req, "_t_submit", now), v_submit=self._v0)
             st.t_admit = now
             prompt = np.asarray(req.prompt, np.int32)
         else:                                    # resume after preemption
             st = entry.st
             prompt = np.concatenate([np.asarray(req.prompt, np.int32),
                                      np.asarray(st.tokens, np.int32)])
-        # prefill lengths are bucketed to powers of two so resumes (whose
-        # lengths are arbitrary) reuse one compiled prefill per bucket:
-        # the prompt is right-padded, logits are read at the true last
-        # position, and the cache is sliced back before insertion (causal
-        # attention keeps positions < n independent of the padding)
+        if self._mgr is not None:
+            # pool-direct prefill: the slot and the prompt's pages are
+            # reserved NOW (the same decision point blocking admission
+            # reserved at, so admission order and token streams match)
+            job = self._mgr.submit(entry, st, prompt)
+            job.admit_step = self._steps
+            if self.prefill_chunk:
+                return                           # chunks interleave in step()
+            # blocking: whole prompt as one chunk, inline — priced on the
+            # virtual clock at its chunk-equivalent cost, *serially* (it
+            # runs on the driver thread and stalls the lockstep loop)
+            self.vclock.advance_serial(-(-len(prompt) // self.chunk_unit))
+            self._finish_prefill(job, self._mgr.drain(job))
+            return
+        # legacy path (no chunk step): prefill to a contiguous (1, s)
+        # cache, then scatter it into the pool.  Prefill lengths are
+        # bucketed to powers of two so resumes (whose lengths are
+        # arbitrary) reuse one compiled prefill per bucket: the prompt is
+        # right-padded, logits are read at the true last position, and
+        # the cache is sliced back before insertion (causal attention
+        # keeps positions < n independent of the padding)
         n = len(prompt)
         pad = 1 << (n - 1).bit_length()
         if pad == n:
@@ -283,12 +426,15 @@ class Scheduler:
                                             n - 1)
             cache = {"k": cache["k"][:, :, :n], "v": cache["v"][:, :, :n],
                      "index": jnp.asarray(n, jnp.int32)}
+        self.vclock.advance_serial(-(-n // self.chunk_unit))
         tok = int(self._sample_rows(logits[:, -1], [_Active(req, st, 0)])[0])
         if entry.st is None:
             st.t_first = self.clock()
+            st.v_first = self.vclock.t
         st.tokens.append(tok)
         if len(st.tokens) >= st.max_new_tokens or tok == self.eos_id:
             st.t_done = self.clock()
+            st.v_done = self.vclock.t
             self.done.append(st)
             return
         slot = self.pool.alloc()
@@ -297,6 +443,26 @@ class Scheduler:
         self.active[slot] = _Active(req, st, self._steps)
         self._last_tokens[slot, 0] = tok
         self._active_mask[slot] = 1
+
+    def _finish_prefill(self, job, logits) -> None:
+        """A job's final chunk landed: sample the first token and either
+        finish the request or activate its (already-populated) slot."""
+        st, req = job.st, job.entry.req
+        tok = int(self._sample_rows(logits[:, -1], [_Active(req, st, 0)])[0])
+        if job.entry.st is None:
+            st.t_first = self.clock()
+            st.v_first = self.vclock.t
+        st.tokens.append(tok)
+        if len(st.tokens) >= st.max_new_tokens or tok == self.eos_id:
+            st.t_done = self.clock()
+            st.v_done = self.vclock.t
+            self.done.append(st)
+            self.pool.free(job.slot)
+            return
+        st.slot = job.slot
+        self.active[job.slot] = _Active(req, st, job.admit_step)
+        self._last_tokens[job.slot, 0] = tok
+        self._active_mask[job.slot] = 1
 
     # -- preemption --------------------------------------------------------
     def _evict(self, slot: int) -> _Entry:
@@ -314,22 +480,46 @@ class Scheduler:
         self._preemptions += 1
 
     # -- one decode iteration ----------------------------------------------
+    def _requeue_job(self, job) -> None:
+        """Re-queue an evicted mid-prefill job at the queue front.  A
+        fresh job (no tokens yet) restarts from scratch; a resume job
+        keeps its result so the already-emitted tokens survive."""
+        st = job.st if job.st.tokens else None
+        if st is not None:
+            st.slot = -1
+            st.preemptions += 1
+        self.queue.appendleft(_Entry(job.entry.req, st))
+        self._preemptions += 1
+
     def step(self, evict_on_starvation: bool = False) -> list:
-        """One slot-wise decode over the active set.
+        """One scheduler tick: ingest at most ``prefill_chunk`` queued
+        prompt tokens, then one slot-wise decode over the active set.
 
         Paged pools grow slots crossing a page boundary first; starvation
-        preempts the youngest in-flight request (ties by request id) until
-        the step fits.  When the *sole* active request starves the pool can
-        never make progress alone: raise ``PoolExhausted``, or — under a
-        router (``evict_on_starvation``) — hand the evicted entry back for
-        re-routing to a replica that can hold it.  Returns the evicted
-        entries (empty in the single-engine path).
+        preempts mid-prefill jobs first (youngest — they have ingested
+        the least), then the youngest in-flight request (ties by request
+        id) until the step fits.  When the *sole* active request starves
+        the pool can never make progress alone: raise ``PoolExhausted``,
+        or — under a router (``evict_on_starvation``) — hand the evicted
+        entry back for re-routing to a replica that can hold it.  Returns
+        the evicted entries (empty in the single-engine path).
         """
+        chunked = 0
+        if self._mgr is not None and self._mgr.has_jobs:
+            self._peak = max(self._peak, self.in_flight)
+            finished, chunked = self._mgr.tick(self.vclock)
+            for job, logits in finished:
+                self._finish_prefill(job, logits)
+        if not self.active:
+            return []
         evicted = []
         while True:
             starved = self.pool.prepare_decode(sorted(self.active))
             if not starved:
                 break
+            if self._mgr is not None and self._mgr.has_jobs:
+                self._requeue_job(self._mgr.evict_newest())
+                continue
             if len(self.active) == 1:
                 (slot,) = self.active
                 if not evict_on_starvation:
@@ -345,19 +535,23 @@ class Scheduler:
                          key=lambda sl: (self.active[sl].admit_step,
                                          self.active[sl].req.rid))
             self._preempt(victim)
-        self._peak = max(self._peak, len(self.active))
+        self._peak = max(self._peak, self.in_flight)
         self._peak_resident = max(self._peak_resident,
                                   int(self.pool.lengths.sum()))
         logits, new_cache = self.decode_fn(
             self.pool.cache, jnp.asarray(self._last_tokens),
             jnp.asarray(self._active_mask), *self.pool.decode_extras())
         self.pool.update(new_cache, tuple(self.active))
+        self.vclock.advance(1)
         self._steps += 1
         self._busy += len(self.active)
+        if chunked:
+            self._overlap += 1       # ingested a chunk AND decoded a token
         S = self.pool.num_slots
         rows = [self.active.get(i) for i in range(S)]
         toks = self._sample_rows(logits[:, -1], rows)
         now = self.clock()
+        vnow = self.vclock.t
         for slot, en in list(self.active.items()):
             st = en.st
             tok = int(toks[slot])
@@ -365,6 +559,7 @@ class Scheduler:
             self._last_tokens[slot, 0] = tok
             if len(st.tokens) >= st.max_new_tokens or tok == self.eos_id:
                 st.t_done = now
+                st.v_done = vnow
                 self.done.append(st)
                 del self.active[slot]
                 self._active_mask[slot] = 0
@@ -376,12 +571,20 @@ class Scheduler:
     def stats(self) -> ServeStats:
         wall = self.clock() - self._t0
         done = sorted(self.done, key=lambda r: r.rid)
+        ttfts = [r.ttft_steps for r in done if r.v_first >= 0]
+        mgr = self._mgr
         return ServeStats(
             results=done, wall_s=wall, decode_steps=self._steps,
             generated_tokens=sum(len(r.tokens) for r in done),
             occupancy=self._busy / max(self._steps * self.pool.num_slots, 1),
             peak_active=self._peak, peak_resident_tokens=self._peak_resident,
-            preemptions=self._preemptions)
+            preemptions=self._preemptions,
+            prefill_chunks=mgr.chunks_run if mgr else 0,
+            prefill_tokens=mgr.tokens_ingested if mgr else 0,
+            prefill_compiles=len(mgr.compiled_buckets) if mgr else 0,
+            prefill_queue_peak=mgr.queue_peak if mgr else 0,
+            overlap_steps=self._overlap,
+            mean_ttft_steps=float(np.mean(ttfts)) if ttfts else 0.0)
 
     # -- main loop ---------------------------------------------------------
     def run(self, requests) -> ServeStats:
@@ -396,9 +599,10 @@ class Scheduler:
             r._t_submit = self._t0
             self.queue.append(_Entry(r))
         while self.has_work:
-            if self.policy == "continuous" or not self.active:
+            if self.policy == "continuous" or \
+                    not (self.active or self.prefill_backlog):
                 self.admit_from_queue()
-            if not self.active:
+            if not self.active and not self.prefill_backlog:
                 if self.queue:
                     en = self.queue[0]
                     raise PoolExhausted(

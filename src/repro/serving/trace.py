@@ -41,6 +41,32 @@ def zipf_trace(n: int, vocab_size: int, *, max_prompt: int = 32,
     return reqs
 
 
+def longprompt_trace(n: int, vocab_size: int, *, max_prompt: int = 128,
+                     max_new: int = 16, alpha: float = 1.5, seed: int = 0,
+                     temperature: float = 0.0,
+                     top_k: int = 0) -> list[Request]:
+    """n requests whose prompt lengths cluster *near* ``max_prompt``.
+
+    The shortfall below max_prompt is the Zipf draw (so most prompts sit
+    at the top bucket, a tail reaches down to ~max_prompt/4) and the
+    generations are short — the prefill-stall regime: admission cost
+    dominates decode cost, which is exactly where blocking prompt
+    ingestion serializes the fleet and chunked prefill pays off.
+    Deterministic for a fixed seed, like every trace here.
+    """
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        short = int(np.clip(rng.zipf(alpha) - 1, 0, max_prompt * 3 // 4))
+        plen = _bucket(max_prompt - short, max_prompt)
+        nnew = int(np.clip(rng.zipf(alpha), 1, max_new))
+        prompt = rng.randint(1, max(vocab_size - 1, 2),
+                             size=(plen,)).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=nnew,
+                            temperature=temperature, top_k=top_k))
+    return reqs
+
+
 def uniform_trace(n: int, vocab_size: int, *, prompt_len: int = 16,
                   max_new: int = 8, seed: int = 0,
                   temperature: float = 0.0, top_k: int = 0) -> list[Request]:

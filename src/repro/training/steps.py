@@ -136,6 +136,46 @@ def build_prefill_step(model, mesh=None):
     return prefill_step
 
 
+def build_prefill_chunk_step(model, mesh=None):
+    """Chunked prefill straight into a *contiguous* serving KV pool.
+
+    ``cache`` is the pool's cache tree — K/V shaped ``(layers, num_slots,
+    max_len, kv_heads, head_dim)`` plus the per-slot ``index`` vector —
+    and ``tokens`` is one bucketed ``(1, c)`` chunk of one request's
+    prompt.  The chunk's K/V scatter directly to ``[slot, offset:offset+c)``
+    (no intermediate contiguous ``(1, s)`` cache that ``insert`` would
+    have to re-scatter), the chunk attends causally over everything the
+    slot already holds, and the returned logits sit at the chunk's last
+    valid position (``n_valid`` <= c covers bucket padding).  Jittable
+    with ``kv_bound`` static (it sizes the slot's KV read-back — a short
+    prompt attends its own bucketed prefix, not max_len); the engine
+    donates the cache argument.
+    """
+    def chunk_step(params, cache, tokens, slot, offset, n_valid, kv_bound):
+        return model.chunk_prefill(params, cache, tokens, slot, offset,
+                                   n_valid, mesh, kv_bound)
+    return chunk_step
+
+
+def build_prefill_chunk_step_paged(model, mesh=None):
+    """Chunked prefill straight into a *paged* serving KV pool.
+
+    Same contract as ``build_prefill_chunk_step``, but K/V are the page
+    pool ``(layers, num_pages, page_size, kv_heads, head_dim)`` and
+    ``pages_row`` is the slot's ``(max_pages,)`` page-table row: chunk
+    token at global position j lands in page ``pages_row[j // page_size]``
+    at offset ``j % page_size`` — its final resting place, one write.
+    Pages must be reserved by the pool before the call; rows past the
+    reserved region (bucket padding) fall into the junk page 0.
+    """
+    def chunk_step(params, cache, tokens, slot, offset, n_valid, kv_bound,
+                   pages_row):
+        return model.chunk_prefill(params, cache, tokens, slot, offset,
+                                   n_valid, mesh, kv_bound,
+                                   pages_row=pages_row)
+    return chunk_step
+
+
 def build_decode_step(model, mesh=None):
     def decode_step(params, cache, tokens):
         return model.decode_step(params, cache, tokens, mesh)
