@@ -17,13 +17,19 @@ traffic lives in):
    trace through a ``least_loaded`` ``ReplicaRouter`` over ``FLEET``
    tight replicas vs one tight engine — fleet tok/s, aggregate
    in-flight, and load imbalance (max/mean peak resident tokens).
-4. **blocking vs chunked prefill** (this PR): a long-prompt-heavy trace
+4. **blocking vs chunked prefill** (PR 4): a long-prompt-heavy trace
    (``longprompt_trace`` — the prefill-stall regime) through the same
    fleet with prompt ingestion blocking at dispatch vs chunked and
    interleaved with decode ticks.  Compared on the deterministic
    **TTFT step proxy** (virtual clock: one unit per jitted invocation,
    blocking prefills priced serially at their chunk-equivalents, round
    cost = busiest replica) — chunked must be strictly lower.
+5. **cold vs prefix-cached shared prefixes** (this PR): a trace whose
+   prompts open with Zipf-clustered shared heads (``sharedprefix_trace``)
+   through a paged ``prefix_affinity`` fleet with the shared-prefix KV
+   cache off vs on.  The cached fleet must prefill strictly fewer
+   prompt tokens (hit rate > 0) while emitting bit-identical token
+   streams — reuse is free or it is a bug.
 
 The layout x policy grid cells run with ``prefill_chunk=0`` (blocking)
 so their decode-step counts stay comparable across baselines; the
@@ -132,6 +138,19 @@ def _longprompt(n: int, engine, max_new: int = 8, seed: int = TRACE_SEED):
                             max_new=max_new, seed=seed)
 
 
+def _sharedprefix(n: int, engine, seed: int = TRACE_SEED):
+    """Prompts opening with Zipf-clustered shared heads (two 16-token
+    pages each) — the regime where prefix-cache page reuse shows up."""
+    from repro.serving import sharedprefix_trace
+    return sharedprefix_trace(n, engine.cfg.vocab_size, seed=seed)
+
+
+def _num(x, nd: int = 4):
+    """Round for the JSON emitter; NaN (e.g. imbalance of an idle fleet)
+    becomes None — valid strict JSON instead of a bare NaN literal."""
+    return None if x != x else round(x, nd)
+
+
 def run(report) -> None:
     engine = _engine("contiguous")
     reqs = _trace(N_REQUESTS, engine)
@@ -217,6 +236,28 @@ def run(report) -> None:
            f"{p_chunk.prefill_chunks} chunks, "
            f"{p_chunk.overlap_steps} overlapped ticks")
 
+    # --- shared-prefix trace: cold vs prefix-cached paged fleet ----------
+    sp_router = _router(e_paged, policy="prefix_affinity")
+    strace = _sharedprefix(N_REQUESTS, e_paged)
+    sp_router.run(strace)                                         # warm
+    sp_router.run(strace, prefix_cache=True)
+    t0 = time.perf_counter()
+    sp_cold = sp_router.run(strace)
+    t_sc = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sp_hot = sp_router.run(strace, prefix_cache=True)
+    t_sh = time.perf_counter() - t0
+    report("serve_sharedprefix_router_cold", t_sc * 1e6,
+           f"{sp_cold.prefill_tokens} prompt tokens prefilled; "
+           f"mean TTFT {sp_cold.mean_ttft_steps:.1f} vsteps; "
+           f"{sp_cold.tokens_per_s:.1f} tok/s fleet")
+    report("serve_sharedprefix_router_cached", t_sh * 1e6,
+           f"{sp_hot.prefill_tokens} prompt tokens prefilled "
+           f"({sp_hot.prefill_tokens_saved} saved, hit rate "
+           f"{sp_hot.prefix_hit_rate:.0%}); mean TTFT "
+           f"{sp_hot.mean_ttft_steps:.1f} vsteps; "
+           f"{sp_hot.tokens_per_s:.1f} tok/s fleet")
+
 
 def run_smoke(out_path: str = "BENCH_serving.json",
               n_requests: int = 12, max_new: int = 32,
@@ -235,11 +276,13 @@ def run_smoke(out_path: str = "BENCH_serving.json",
         baseline = json.loads(Path(out_path).read_text())
     tight = _register_tight_target()
     cells = {}
-    single_cont = None
+    single_cont = single_paged = None
     for layout in ("contiguous", "paged"):
         engine = _engine(layout, target=tight)
         if layout == "contiguous":
             single_cont = engine
+        else:
+            single_paged = engine
         reqs = _trace(n_requests, engine, max_new=max_new)
         engine.run(reqs, policy="continuous", prefill_chunk=0)  # warm jits
         for policy in ("static", "continuous"):
@@ -281,7 +324,7 @@ def run_smoke(out_path: str = "BENCH_serving.json",
         "peak_in_flight": fleet.peak_in_flight,
         "in_flight_vs_single":
             round(fleet.peak_in_flight / max(cc["peak_active"], 1), 2),
-        "load_imbalance": round(fleet.imbalance, 4),
+        "load_imbalance": _num(fleet.imbalance),
         "reroutes": fleet.reroutes,
     }
     # long-prompt trace, blocking vs chunked prompt ingestion: the TTFT
@@ -313,12 +356,45 @@ def run_smoke(out_path: str = "BENCH_serving.json",
             "replicas": FLEET,
             "reroutes": stats.reroutes,
         }
+    # shared-prefix trace, cache off vs on, through a paged
+    # prefix_affinity fleet (sharers colocate, so per-replica caches
+    # compose): the reuse comparison the prefix KV cache is judged on.
+    # 3x the fleet-capacity request count — hits need waves that arrive
+    # after an earlier sharer's prefill completed (no in-flight dedup).
+    # Warm both modes — cached suffix chunks start mid-prompt, so their
+    # (bucket, kv_bound) pairs can differ from the cold run's
+    strace = _sharedprefix(3 * n_requests, single_paged)
+    sp_router = _router(single_paged, policy="prefix_affinity")
+    sp_router.run(strace, policy="continuous")
+    sp_router.run(strace, policy="continuous", prefix_cache=True)
+    sp_cold = sp_router.run(strace, policy="continuous")
+    sp_hot = sp_router.run(strace, policy="continuous", prefix_cache=True)
+    for name, stats in (("sharedprefix_router_cold", sp_cold),
+                        ("sharedprefix_router_cached", sp_hot)):
+        rounds = max(max(s.decode_steps for s in stats.replica_stats), 1)
+        cells[name] = {
+            "tokens_per_s": round(stats.tokens_per_s, 2),
+            "tokens_per_step": round(stats.generated_tokens / rounds, 4),
+            "mean_ttft_steps": _num(stats.mean_ttft_steps),
+            "prefill_tokens": stats.prefill_tokens,
+            "prefill_tokens_saved": stats.prefill_tokens_saved,
+            "prefix_hits": stats.prefix_hits,
+            "prefix_misses": stats.prefix_misses,
+            "prefix_hit_rate": _num(stats.prefix_hit_rate),
+            "generated_tokens": stats.generated_tokens,
+            "decode_steps": rounds,
+            "replicas": FLEET,
+            "route_policy": "prefix_affinity",
+            "load_imbalance": _num(stats.imbalance),
+        }
     out = {"arch": ARCH, "target": tight, "n_requests": n_requests,
            "max_len": MAX_LEN, "trace_seed": TRACE_SEED, "cells": cells}
     pc = cells["paged_continuous"]
     rc = cells[f"router_least_loaded_x{FLEET}"]
     lb = cells["longprompt_router_blocking"]
     lc = cells["longprompt_router_chunked"]
+    sc = cells["sharedprefix_router_cold"]
+    sh = cells["sharedprefix_router_cached"]
     print(f"paged {pc['tokens_per_s']} tok/s @ "
           f"{pc['hbm_bytes_per_admitted_token']} B/tok, peak "
           f"{pc['peak_active']} | contiguous {cc['tokens_per_s']} tok/s @ "
@@ -329,7 +405,10 @@ def run_smoke(out_path: str = "BENCH_serving.json",
           f"{rc['load_imbalance']} | longprompt TTFT "
           f"{lc['mean_ttft_steps']} vsteps chunked vs "
           f"{lb['mean_ttft_steps']} blocking "
-          f"({lc['overlap_steps']} overlapped ticks)")
+          f"({lc['overlap_steps']} overlapped ticks) | sharedprefix "
+          f"prefill {sh['prefill_tokens']} vs {sc['prefill_tokens']} cold "
+          f"({sh['prefill_tokens_saved']} saved, hit rate "
+          f"{sh['prefix_hit_rate']})")
     # gates run BEFORE the write: a failing run must not replace the
     # checked-in baseline with its own (regressed) numbers
     try:
@@ -347,8 +426,26 @@ def run_smoke(out_path: str = "BENCH_serving.json",
                 f"{lc['mean_ttft_steps']} vsteps is not strictly lower "
                 f"than blocking's {lb['mean_ttft_steps']} on the "
                 f"long-prompt trace")
+        sp_tok = lambda stats: [r.tokens for r in stats.results]  # noqa: E731
+        if sp_tok(sp_hot) != sp_tok(sp_cold):
+            raise SystemExit(
+                "SMOKE FAIL: prefix-cached token streams differ from the "
+                "cache-off run on the shared-prefix trace — reuse must "
+                "never change output")
+        if not sh["prefill_tokens_saved"] > 0:
+            raise SystemExit(
+                "SMOKE FAIL: prefix cache saved no prefill tokens on the "
+                "shared-prefix trace (hit rate "
+                f"{sh['prefix_hit_rate']}) — the reuse layer is dead")
+        if sh["prefill_tokens"] + sh["prefill_tokens_saved"] != \
+                sc["prefill_tokens"]:
+            raise SystemExit(
+                "SMOKE FAIL: cached prefill tokens + saved tokens != cold "
+                f"prefill tokens ({sh['prefill_tokens']} + "
+                f"{sh['prefill_tokens_saved']} vs {sc['prefill_tokens']}) "
+                "— the savings accounting leaks")
         if baseline is not None:
-            _check_regression(baseline, out)
+            _check_regression(baseline, out, out_path)
     except SystemExit:
         print("fresh cells (NOT written):\n" + json.dumps(cells, indent=2))
         raise
@@ -370,46 +467,63 @@ def _strip_wall(cells: dict) -> dict:
             for n, c in cells.items()}
 
 
-def _check_regression(baseline: dict, fresh: dict) -> None:
+def _check_regression(baseline: dict, fresh: dict,
+                      out_path: str = "BENCH_serving.json") -> None:
     """Fail when a cell's throughput regresses > REGRESSION_TOLERANCE vs
     the checked-in baseline.
 
-    The *enforced* metric is ``tokens_per_step`` — generated tokens per
-    decode step, the machine-independent component of tok/s: it is
-    deterministic for the fixed trace seed, and it is exactly what a
-    batching/routing regression moves (worse admission or preemption
-    behaviour burns more decode steps for the same tokens).  Wall-clock
-    tok/s swings 2-3x with CI-runner load on these sub-second cells, so
-    it is reported as an advisory only.  Cells that vanished from the
-    grid fail too (a silently dropped comparison is a regression in
-    coverage, not just speed)."""
+    The *enforced* metrics are ``tokens_per_step`` (generated tokens per
+    decode step — the machine-independent component of tok/s, exactly
+    what a batching/routing regression moves), the ``mean_ttft_steps``
+    proxy (deterministic like tokens/step; lower is better, so the gate
+    is a ceiling), and ``prefill_tokens_saved`` (the prefix cache's
+    reuse, which must stay strictly positive wherever the baseline had
+    it).  Each metric guards **independently**: a baseline cell that
+    predates one metric must not silently skip the others' gates.
+    Wall-clock tok/s swings 2-3x with CI-runner load on these sub-second
+    cells, so it is reported as an advisory only.  Cells that vanished
+    from the grid fail (a silently dropped comparison is a regression in
+    coverage, not just speed) — and cells *new* to the grid fail too:
+    an ungated cell ships no protection, so the baseline file must be
+    refreshed in the same PR that adds the cell."""
     old_cells = baseline.get("cells", {})
     missing = [n for n in old_cells if n not in fresh["cells"]]
     if missing:
         raise SystemExit("SMOKE FAIL: cells missing from fresh run vs "
                          "checked-in baseline: " + ", ".join(missing))
+    added = [n for n in fresh["cells"] if n not in old_cells]
+    if added:
+        raise SystemExit(
+            f"SMOKE FAIL: {len(added)} new cell(s) not in baseline — "
+            f"refresh {out_path} in this PR so they are gated from day "
+            f"one: " + ", ".join(sorted(added)))
     bad = []
     for name in sorted(old_cells):
         old, new = old_cells[name], fresh["cells"][name]
-        if "tokens_per_step" not in old:
-            continue   # pre-metric baseline: nothing to enforce yet
-        floor = old["tokens_per_step"] * (1.0 - REGRESSION_TOLERANCE)
-        if new["tokens_per_step"] < floor:
-            bad.append(f"{name}: {new['tokens_per_step']} tokens/step < "
-                       f"{floor:.3f} (baseline {old['tokens_per_step']} "
-                       f"- {REGRESSION_TOLERANCE:.0%})")
-        # TTFT step proxy is deterministic like tokens/step; LOWER is
-        # better, so the gate is a ceiling
-        if old.get("mean_ttft_steps", 0) > 0:
+        if "tokens_per_step" in old:
+            floor = old["tokens_per_step"] * (1.0 - REGRESSION_TOLERANCE)
+            if new.get("tokens_per_step", 0.0) < floor:
+                bad.append(
+                    f"{name}: {new.get('tokens_per_step')} tokens/step < "
+                    f"{floor:.3f} (baseline {old['tokens_per_step']} "
+                    f"- {REGRESSION_TOLERANCE:.0%})")
+        if (old.get("mean_ttft_steps") or 0) > 0:
             ceiling = old["mean_ttft_steps"] * (1.0 + REGRESSION_TOLERANCE)
-            if new.get("mean_ttft_steps", 0) > ceiling:
+            if (new.get("mean_ttft_steps") or 0) > ceiling:
                 bad.append(
                     f"{name}: {new.get('mean_ttft_steps')} TTFT vsteps > "
                     f"{ceiling:.3f} (baseline {old['mean_ttft_steps']} "
                     f"+ {REGRESSION_TOLERANCE:.0%})")
-        wall_floor = old["tokens_per_s"] * (1.0 - REGRESSION_TOLERANCE)
-        if new["tokens_per_s"] < wall_floor:
-            print(f"advisory: {name} wall-clock {new['tokens_per_s']} "
+        if old.get("prefill_tokens_saved", 0) > 0 and \
+                new.get("prefill_tokens_saved", 0) <= 0:
+            bad.append(f"{name}: prefix cache saved "
+                       f"{new.get('prefill_tokens_saved', 0)} prefill "
+                       f"tokens (baseline {old['prefill_tokens_saved']}) "
+                       f"— reuse went dead")
+        if "tokens_per_s" in old and \
+                new.get("tokens_per_s", 0.0) < \
+                old["tokens_per_s"] * (1.0 - REGRESSION_TOLERANCE):
+            print(f"advisory: {name} wall-clock {new.get('tokens_per_s')} "
                   f"tok/s below baseline {old['tokens_per_s']} - "
                   f"{REGRESSION_TOLERANCE:.0%} (not enforced: wall time "
                   f"tracks runner load, tokens/step tracks the code)")
@@ -418,7 +532,7 @@ def _check_regression(baseline: dict, fresh: dict) -> None:
                          "checked-in baseline:\n  " + "\n  ".join(bad))
     print(f"baseline check OK: {len(old_cells)} cells within "
           f"{REGRESSION_TOLERANCE:.0%} of checked-in tokens/step + "
-          f"TTFT vsteps")
+          f"TTFT vsteps (+ prefix-cache savings alive)")
 
 
 def main():

@@ -35,6 +35,8 @@ class DeploymentPlan:
     serve_num_pages: int = 0              # paged KV: pool pages (incl. junk 0)
     serve_replicas: int = 1               # engines the serve budget is split over
     serve_prefill_chunk: int = 0          # prompt tokens ingested per decode tick
+    serve_prefix_cache_pages: int = 0     # paged KV: LRU pin cap for the
+    #                                       shared-prefix cache (same pool)
     sharding_fallbacks: list = dataclasses.field(default_factory=list)
     napkin: dict = dataclasses.field(default_factory=dict)
     notes: list = dataclasses.field(default_factory=list)
@@ -76,6 +78,10 @@ class DeploymentPlan:
         if self.serve_prefill_chunk:
             lines.append(f"  serve prefill   : {self.serve_prefill_chunk} "
                          f"tokens/chunk interleaved with decode ticks")
+        if self.serve_prefix_cache_pages:
+            lines.append(f"  serve prefix $  : up to "
+                         f"{self.serve_prefix_cache_pages} pages LRU-pinned "
+                         f"for shared-prefix reuse (paged layout)")
         if self.napkin:
             lines.append("  napkin math:")
             for k, v in self.napkin.items():

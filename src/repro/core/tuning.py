@@ -53,6 +53,14 @@ def kv_bytes_per_token(cfg: ModelConfig) -> int:
     return per
 
 
+def prefix_cache_quota(num_pages: int) -> int:
+    """LRU pin cap for the shared-prefix KV cache: ~1/4 of the
+    allocatable page pool, so hot prefixes can never squeeze live
+    requests below 3/4 of their pages.  Single source of truth for the
+    tuner and for engines built without a plan-derived value."""
+    return max((num_pages - 1) // 4, 1) if num_pages else 0
+
+
 def active_param_count(cfg: ModelConfig) -> int:
     """Parameters touched per token (MoE: only top-k experts active)."""
     total = param_count_estimate(cfg)
@@ -258,6 +266,28 @@ def tune(cfg: ModelConfig, shape: ShapeConfig, target: TargetSpec,
                 f"x ~{t_tick*1e3:.2f} ms/tick ≈ {stall*t_tick*1e3:.1f} ms "
                 f"to first token; chunked ingest overlaps those ticks "
                 f"with decode, blocking stalls the loop for all of them")
+            # --- shared-prefix KV cache budget -----------------------------
+            # The cache pins already-resident page runs (LRU) so repeat
+            # prefixes re-prefill nothing; it spends no new HBM — the cap
+            # carves a pin quota out of the page pool above so hot
+            # prefixes can't squeeze live requests below ~3/4 of the
+            # pool.  Savings quote: a hit on an expected-length prompt
+            # skips every fully-covered page's worth of chunk steps.
+            cache_pages = prefix_cache_quota(plan.serve_num_pages)
+            plan.serve_prefix_cache_pages = cache_pages
+            if cache_pages:
+                # probe caps a hit at (len-1)//page_size pages (>= 1
+                # suffix token always re-prefills, its logits seed the
+                # first sample), so a page-aligned prompt still pays one
+                # page — quote that, not a zero-cost hit
+                aligned = (expected_len - 1) // page_size * page_size
+                saved = stall - -(-(expected_len - aligned) // chunk)
+                plan.napkin["serve_prefix_cache"] = (
+                    f"{cache_pages} pages ({cache_pages * page_size} "
+                    f"tokens) LRU-pinnable for shared prefixes; a hit on "
+                    f"an expected {expected_len}-token prompt re-prefills "
+                    f"{expected_len - aligned} instead of {expected_len} "
+                    f"tokens (~{saved} of {stall} chunk steps saved)")
             # fleet capacity: what N replicas hold together, in tokens —
             # the quantity a router's least-loaded policy balances
             fleet_tokens = replicas * usable_tokens

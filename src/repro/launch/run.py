@@ -47,7 +47,10 @@ def run_command(command: str, job=None, workdir: Path | None = None,
             temperature=float(kw.get("temperature", 0.0)),
             top_k=int(kw.get("top-k", 0)),
             replicas=int(kw.get("replicas", 1)),
-            route_policy=kw.get("route-policy", "least_loaded"), log=log)
+            route_policy=kw.get("route-policy", "least_loaded"),
+            prefix_cache=str(kw.get("prefix-cache", "")).lower()
+            in ("true", "1", "yes"),
+            trace=kw.get("trace", "uniform"), log=log)
     if "lulesh" in name:
         import time
         from repro.models import lulesh

@@ -20,6 +20,37 @@ import numpy as np
 
 from repro.configs.base import get_config
 
+# synthetic request mixes the engine/router paths can serve
+TRACES = ("uniform", "zipf", "longprompt", "sharedprefix")
+
+
+def _make_trace(name: str, n: int, vocab: int, prefill_len: int,
+                decode_tokens: int, seed: int, temperature: float,
+                top_k: int, page_size: int = 0):
+    from repro.serving import (longprompt_trace, sharedprefix_trace,
+                               uniform_trace, zipf_trace)
+    kw = dict(max_new=decode_tokens, seed=seed, temperature=temperature,
+              top_k=top_k)
+    if name == "zipf":
+        return zipf_trace(n, vocab, max_prompt=prefill_len, **kw)
+    if name == "longprompt":
+        return longprompt_trace(n, vocab, max_prompt=prefill_len, **kw)
+    if name == "sharedprefix":
+        # head = half the prompt budget, aligned to the pool's REAL page
+        # size so the prefix cache has whole pages to reuse (a head
+        # aligned to anything else never fully covers a page and the
+        # cache silently goes dead); suffixes fill the rest.  A prompt
+        # budget too small for an aligned head degrades to an unaligned
+        # one — fewer/no hits, but never an over-max_len trace.
+        ps = page_size or 16
+        head = prefill_len // 2 // ps * ps
+        if head < 1:
+            head = max(min(ps, prefill_len - 1), 1)
+        return sharedprefix_trace(n, vocab, head_len=head,
+                                  max_suffix=max(prefill_len - head, 1),
+                                  **kw)
+    return uniform_trace(n, vocab, prompt_len=prefill_len, **kw)
+
 
 def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
                prefill_len: int = 64, decode_tokens: int = 16,
@@ -29,7 +60,9 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
                page_size: int = 0, temperature: float = 0.0,
                top_k: int = 0, replicas: int = 1,
                route_policy: str = "least_loaded",
-               prefill_chunk: int | None = None, log=print) -> dict:
+               prefill_chunk: int | None = None,
+               prefix_cache: bool = False, trace: str = "uniform",
+               log=print) -> dict:
     """Serve `requests` requests (default: one per slot) of `prefill_len`
     prompts, `decode_tokens` generations each.  Reports per-request latency
     and aggregate tokens/sec.  With ``replicas`` > 1 the requests flow
@@ -37,8 +70,14 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
     may be comma-separated to mix layouts; ``route_policy`` picks the
     balancing rule).  ``prefill_chunk`` sets the prompt-ingestion grain
     (None: the tuner's ``plan.serve_prefill_chunk``; 0: blocking
-    full-prompt prefill at admission)."""
+    full-prompt prefill at admission).  ``prefix_cache`` (paged layout
+    only) reuses cached shared-prefix page runs by pointer copy, so
+    repeat prefixes skip their re-prefill entirely; pair it with
+    ``trace='sharedprefix'`` (Zipf-clustered prompt heads) to see hits —
+    the default uniform trace draws unrelated prompts."""
     cfg = get_config(arch)
+    if trace not in TRACES:
+        raise ValueError(f"trace {trace!r} not in {tuple(TRACES)}")
     from repro.serving.engine import SERVABLE_FAMILIES
     if cfg.family not in SERVABLE_FAMILIES:
         if replicas > 1:
@@ -49,7 +88,7 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
         return _legacy_serve_main(arch, batch, prefill_len, decode_tokens,
                                   target, seed, log)
 
-    from repro.serving import ServeEngine, uniform_trace
+    from repro.serving import ServeEngine
     pool_len = max_len or (prefill_len + decode_tokens)
     if replicas > 1:
         return _router_serve_main(
@@ -58,15 +97,16 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
             mode=mode, requests=requests, pool_len=pool_len,
             kv_layout=kv_layout, page_size=page_size,
             temperature=temperature, top_k=top_k, replicas=replicas,
-            route_policy=route_policy, prefill_chunk=prefill_chunk, log=log)
+            route_policy=route_policy, prefill_chunk=prefill_chunk,
+            prefix_cache=prefix_cache, trace=trace, log=log)
     engine = ServeEngine(arch=arch, target=target, num_slots=batch,
                          max_len=pool_len, seed=seed, kv_layout=kv_layout,
                          page_size=page_size, prefill_chunk=prefill_chunk,
-                         log=log)
+                         prefix_cache=prefix_cache, log=log)
     n = requests or engine.num_slots
-    reqs = uniform_trace(n, cfg.vocab_size, prompt_len=prefill_len,
-                         max_new=decode_tokens, seed=seed,
-                         temperature=temperature, top_k=top_k)
+    reqs = _make_trace(trace, n, cfg.vocab_size, prefill_len,
+                       decode_tokens, seed, temperature, top_k,
+                       page_size=engine.page_size)
     stats = engine.run(reqs, policy=mode)
     for r in stats.results:
         log(f"[serve]   req {r.rid}: {r.prompt_len}+{len(r.tokens)} tokens, "
@@ -85,6 +125,9 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
         "prefill_queue_peak": stats.prefill_queue_peak,
         "overlap_steps": stats.overlap_steps,
         "mean_ttft_steps": stats.mean_ttft_steps,
+        "prefix_hits": stats.prefix_hits,
+        "prefix_misses": stats.prefix_misses,
+        "prefill_tokens_saved": stats.prefill_tokens_saved,
         "decode_s": stats.wall_s,
         "decode_tok_per_s": stats.tokens_per_s,
         "latency_mean_s": float(np.mean([r.latency_s for r in stats.results])),
@@ -100,18 +143,20 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
 def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
                        seed, mode, requests, pool_len, kv_layout, page_size,
                        temperature, top_k, replicas, route_policy,
-                       prefill_chunk=None, log=print) -> dict:
+                       prefill_chunk=None, prefix_cache=False,
+                       trace="uniform", log=print) -> dict:
     """Multi-replica path: ReplicaRouter over N tuner-split engines."""
-    from repro.serving import ReplicaRouter, uniform_trace
+    from repro.serving import ReplicaRouter
     cfg = get_config(arch)
     router = ReplicaRouter.build(
         arch=arch, target=target, replicas=replicas, kv_layout=kv_layout,
         num_slots=batch, max_len=pool_len, seed=seed, policy=route_policy,
-        page_size=page_size, prefill_chunk=prefill_chunk, log=log)
+        page_size=page_size, prefill_chunk=prefill_chunk,
+        prefix_cache=prefix_cache, log=log)
     n = requests or batch * replicas
-    reqs = uniform_trace(n, cfg.vocab_size, prompt_len=prefill_len,
-                         max_new=decode_tokens, seed=seed,
-                         temperature=temperature, top_k=top_k)
+    reqs = _make_trace(trace, n, cfg.vocab_size, prefill_len,
+                       decode_tokens, seed, temperature, top_k,
+                       page_size=max(e.page_size for e in router.engines))
     stats = router.run(reqs, policy=mode)
     for r in stats.results:
         log(f"[serve]   req {r.rid} -> replica "
@@ -129,6 +174,9 @@ def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
         "prefill_chunks": stats.prefill_chunks,
         "overlap_steps": stats.overlap_steps,
         "mean_ttft_steps": stats.mean_ttft_steps,
+        "prefix_hits": stats.prefix_hits,
+        "prefix_misses": stats.prefix_misses,
+        "prefill_tokens_saved": stats.prefill_tokens_saved,
         "decode_s": stats.wall_s,
         "decode_tok_per_s": stats.tokens_per_s,
         "latency_mean_s": float(np.mean([r.latency_s
@@ -243,6 +291,24 @@ def main(argv=None):
                    help="prompt tokens ingested per decode tick (chunked "
                         "prefill); -1 = the tuner's plan.serve_prefill_"
                         "chunk, 0 = blocking full-prompt prefill")
+    p.add_argument("--trace", choices=TRACES, default="uniform",
+                   help="synthetic request mix: uniform (same-length, "
+                        "unrelated prompts), zipf (heavy-tailed), "
+                        "longprompt (prefill-stall regime), sharedprefix "
+                        "(Zipf-clustered shared prompt heads — the mix "
+                        "--prefix-cache hits on)")
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="reuse shared-prefix KV across requests (paged "
+                        "layout only): a per-replica cache maps page-"
+                        "aligned prompt prefixes to refcounted page runs, "
+                        "so a repeat prefix is admitted by page-table "
+                        "pointer copies — no chunk steps, no KV writes — "
+                        "and only its cold suffix is prefilled; the LRU "
+                        "pin budget comes from the tuner's "
+                        "plan.serve_prefix_cache_pages and gives way "
+                        "under page pressure before any request is "
+                        "preempted; token streams are bit-identical "
+                        "with the cache on or off")
     p.add_argument("--temperature", type=float, default=0.0,
                    help="sampling temperature (0 = greedy)")
     p.add_argument("--top-k", type=int, default=0,
@@ -255,7 +321,8 @@ def main(argv=None):
                top_k=a.top_k, replicas=a.replicas,
                route_policy=a.route_policy,
                prefill_chunk=None if a.prefill_chunk < 0
-               else a.prefill_chunk)
+               else a.prefill_chunk,
+               prefix_cache=a.prefix_cache, trace=a.trace)
 
 
 if __name__ == "__main__":

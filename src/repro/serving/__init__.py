@@ -1,26 +1,31 @@
 """Continuous-batching serving subsystem.
 
 Layered as: KV pool (contiguous ``KVCachePool`` or page-table
-``PagedKVCachePool`` memory layouts) + ``Scheduler`` (admission,
-in-flight batching, page-pressure preemption, per-request sampling) +
-``ServeEngine`` facade (tuner-sized pools, jitted steps, ``kv_layout``
-selection) + ``ReplicaRouter`` (N engines behind one admission queue
-with pluggable routing policies and overflow re-routing).
+``PagedKVCachePool`` memory layouts, with refcounted pages) +
+``PrefixCache`` (shared-prefix KV page-run reuse over a paged pool) +
+``Scheduler`` (admission, in-flight batching, page-pressure preemption,
+per-request sampling) + ``ServeEngine`` facade (tuner-sized pools,
+jitted steps, ``kv_layout`` selection) + ``ReplicaRouter`` (N engines
+behind one admission queue with pluggable routing policies and overflow
+re-routing).
 """
 
 from repro.serving.engine import KV_LAYOUTS, SERVABLE_FAMILIES, ServeEngine
 from repro.serving.pool import KVCachePool, PagedKVCachePool, PoolExhausted
 from repro.serving.prefill import PrefillManager
+from repro.serving.prefix_cache import PrefixCache, prefix_key
 from repro.serving.router import (ROUTE_POLICIES, ReplicaRouter, RouterStats,
                                   prefix_replica)
 from repro.serving.sampling import make_sampler
 from repro.serving.scheduler import (Request, RequestResult, Scheduler,
                                      ServeStats, VirtualClock)
-from repro.serving.trace import longprompt_trace, uniform_trace, zipf_trace
+from repro.serving.trace import (longprompt_trace, sharedprefix_trace,
+                                 uniform_trace, zipf_trace)
 
 __all__ = ["ServeEngine", "SERVABLE_FAMILIES", "KV_LAYOUTS", "KVCachePool",
            "PagedKVCachePool", "PoolExhausted", "PrefillManager",
-           "ReplicaRouter", "RouterStats", "ROUTE_POLICIES",
-           "prefix_replica", "Request", "RequestResult", "Scheduler",
-           "ServeStats", "VirtualClock", "make_sampler", "longprompt_trace",
-           "uniform_trace", "zipf_trace"]
+           "PrefixCache", "prefix_key", "ReplicaRouter", "RouterStats",
+           "ROUTE_POLICIES", "prefix_replica", "Request", "RequestResult",
+           "Scheduler", "ServeStats", "VirtualClock", "make_sampler",
+           "longprompt_trace", "sharedprefix_trace", "uniform_trace",
+           "zipf_trace"]

@@ -31,6 +31,15 @@ ticks inside ``Scheduler.step``), or 0 for blocking full-prompt prefill
 at admission (the old cadence, kept as the TTFT baseline — both modes
 are token-identical by construction).
 
+``prefix_cache=True`` (paged layout only) attaches a shared-prefix KV
+cache (``serving/prefix_cache.PrefixCache``) to every pool this engine
+builds: admissions whose prompt prefix is already resident reuse the
+cached page run by pointer copy and prefill only the cold suffix.  The
+tuner budgets the cache's LRU pin cap (``plan.serve_prefix_cache_pages``)
+out of the same page pool.  Cached and cache-off runs are token-
+identical by construction — the cache only changes *where* prefix KV
+comes from, never its bits.
+
 ``launch/serve.py`` is a thin CLI over this class; the serving benchmark
 drives both layouts and both policies through engines that share the
 request traces, so every comparison is apples-to-apples.
@@ -73,11 +82,15 @@ class ServeEngine:
                  eos_id: int | None = None, kv_layout: str = "contiguous",
                  page_size: int = 0, num_pages: int = 0,
                  replicas: int = 1, prefill_chunk: int | None = None,
-                 log=print):
+                 prefix_cache: bool = False, log=print):
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(f"kv_layout {kv_layout!r} not in {KV_LAYOUTS}")
         if replicas < 1:
             raise ValueError(f"replicas {replicas} < 1")
+        if prefix_cache and kv_layout != "paged":
+            raise ValueError(
+                "prefix_cache reuses page runs by pointer copy — it needs "
+                f"kv_layout='paged', not {kv_layout!r}")
         # `replicas` tells the tuner how many co-resident engines split the
         # HBM budget (ReplicaRouter fleets); num_slots stays the *per
         # replica* ask, so the fleet-wide batch is num_slots x replicas
@@ -139,6 +152,14 @@ class ServeEngine:
         self.eos_id = eos_id
         self.seed = seed
         self.log = log
+        # shared-prefix KV cache (paged only): the tuner carves an LRU
+        # pin budget out of the same page pool; default off so cache-off
+        # baselines (and every pre-cache benchmark cell) are untouched.
+        # The plan's quota is a page count for the PLAN's pool — make_pool
+        # re-caps it against the pool actually built, so an explicit
+        # --num-pages/--page-size override can never void the ~1/4 bound.
+        self.prefix_cache = prefix_cache
+        self.prefix_cache_pages = self.plan.serve_prefix_cache_pages
         # prompt-ingestion grain: None -> the tuner's chunk size; 0 ->
         # blocking full-prompt prefill; >0 -> explicit chunk tokens.
         # chunk_unit prices blocking prefills on the virtual TTFT clock
@@ -179,25 +200,45 @@ class ServeEngine:
                            n_valid, *extras)
 
     # -- driving -----------------------------------------------------------
-    def make_pool(self):
+    def make_pool(self, prefix_cache: bool | None = None):
+        """A fresh pool (and, when enabled, a fresh shared-prefix cache
+        attached to it — per pool, so per replica under a router).
+        ``prefix_cache`` overrides the engine default for this pool."""
+        use_cache = self.prefix_cache if prefix_cache is None \
+            else prefix_cache
         if self.kv_layout == "paged":
-            return PagedKVCachePool(self.model, self.num_slots, self.max_len,
+            pool = PagedKVCachePool(self.model, self.num_slots, self.max_len,
                                     page_size=self.page_size,
                                     num_pages=self.num_pages)
+            if use_cache:
+                from repro.core.tuning import prefix_cache_quota
+                from repro.serving.prefix_cache import PrefixCache
+                # the tuner's quota, but never more than ~1/4 of the pool
+                # that actually got built (it may be smaller than the
+                # plan's when --num-pages/--page-size override the tuner)
+                cap = prefix_cache_quota(pool.num_pages)
+                budget = min(self.prefix_cache_pages or cap, cap)
+                PrefixCache(pool, max_pages=max(budget, 1))
+            return pool
+        if use_cache:
+            raise ValueError("prefix_cache needs the paged KV layout")
         return KVCachePool(self.model, self.num_slots, self.max_len)
 
     def run(self, requests, policy: str = "continuous",
-            prefill_chunk: int | None = None) -> ServeStats:
+            prefill_chunk: int | None = None,
+            prefix_cache: bool | None = None) -> ServeStats:
         """Drain `requests` under `policy` ('continuous' | 'static').
 
         A fresh pool per run keeps back-to-back policy comparisons honest
         (same cold cache state; jitted steps stay warm across runs).
         ``prefill_chunk`` overrides the engine's ingestion grain for this
-        run (0 = blocking full-prompt prefill) — chunked and blocking
-        runs share every jitted step, so the comparison is free.
+        run (0 = blocking full-prompt prefill); ``prefix_cache`` toggles
+        the shared-prefix KV cache for this run — cached and cache-off
+        runs share every jitted step, so either comparison is free.
         """
         chunk = self.prefill_chunk if prefill_chunk is None else prefill_chunk
-        sched = Scheduler(self.make_pool(), self.prefill_fn, self.decode_fn,
+        sched = Scheduler(self.make_pool(prefix_cache=prefix_cache),
+                          self.prefill_fn, self.decode_fn,
                           eos_id=self.eos_id, policy=policy,
                           sampler=self.sampler, chunk_step_fn=self.chunk_fn,
                           prefill_chunk=chunk,

@@ -27,6 +27,15 @@ it through a live page table.  Pages grow on demand during decode
 (``prepare_decode``); when the pool is out of pages the scheduler
 preempts a request and resumes it later.
 
+Pages are **refcounted** (``page_refs``): normally a page has one owner
+and ``free`` returns it immediately, but an attached shared-prefix cache
+(``serving/prefix_cache.PrefixCache``) lets several requests — and the
+cache itself — reference one page at once.  ``free`` then only
+*decrements*; the page rejoins the free list at refcount zero, so a
+preempted sharer can never free a page another request still reads.
+Under page pressure the allocator reclaims cache-only pages (LRU) before
+reporting starvation.
+
 Both pools hand out slots/pages from deterministic LIFO free lists with
 an O(1) boolean free-mask (no linear membership scans), scatter prefilled
 requests in with ``insert``, and ride the whole pool through one
@@ -153,9 +162,11 @@ class KVCachePool:
         the load signal a router's least-loaded policy balances."""
         return self.num_free * self.max_len
 
-    def can_admit(self, prompt_len: int, active_slots=()) -> bool:
+    def can_admit(self, prompt_len: int, active_slots=(),
+                  hit=None) -> bool:
         """A contiguous slot IS the worst-case reservation: one free slot
-        admits any prompt that fits max_len."""
+        admits any prompt that fits max_len.  (``hit`` — a prefix-cache
+        probe — only ever applies to paged pools and is ignored here.)"""
         return self.num_free > 0 and prompt_len <= self.max_len
 
     def can_ever_serve(self, n_tokens: int) -> bool:
@@ -272,6 +283,16 @@ class PagedKVCachePool:
         self._free = _FreeList(num_slots)
         self._free_pages = _FreeList(self.num_pages - 1, start=1)
         self.lengths = np.zeros((num_slots,), np.int64)  # host mirror
+        # owners per page: the allocating request, each prefix-cache
+        # sharer, and the cache cell itself each hold one reference.
+        # page_cached flags cache-pinned pages and _cache_only counts the
+        # ones no request shares (refcount exactly 1) — maintained on the
+        # 1<->2 refcount transitions so the admission/load-signal hot
+        # paths never scan the cache.
+        self.page_refs = np.zeros((self.num_pages,), np.int32)
+        self.page_cached = np.zeros((self.num_pages,), bool)
+        self._cache_only = 0
+        self.prefix_cache = None     # attached by PrefixCache(pool, ...)
 
     # -- capacity ----------------------------------------------------------
     @property
@@ -283,24 +304,49 @@ class PagedKVCachePool:
         return len(self._free_pages)
 
     @property
+    def reclaimable_pages(self) -> int:
+        """Pages the attached prefix cache could hand back on demand
+        (cache-pinned, shared with no live request) — spendable headroom
+        for admission and the router's load signal.  O(1): a running
+        count, not a cache scan."""
+        return self._cache_only
+
+    @property
     def free_tokens(self) -> int:
         """Admittable KV tokens left (paged: free pages worth of tokens,
-        gated on a free page-table row existing at all)."""
-        return self.free_pages * self.page_size if self.num_free else 0
+        gated on a free page-table row existing at all).  Cache-only
+        prefix pages count as free — they are reclaimed before anything
+        starves — and a page shared by N requests is simply not free, so
+        the router's least-loaded signal never double-counts it."""
+        if not self.num_free:
+            return 0
+        return (self.free_pages + self.reclaimable_pages) * self.page_size
 
     def pages_for(self, n_tokens: int) -> int:
         return math.ceil(n_tokens / self.page_size)
 
-    def can_admit(self, prompt_len: int, active_slots=()) -> bool:
+    def can_admit(self, prompt_len: int, active_slots=(),
+                  hit=None) -> bool:
         """Admission needs a slot, pages for the prompt, and headroom for
         the in-flight requests that are about to cross a page boundary —
-        reserving those avoids admit/preempt ping-pong under pressure."""
+        reserving those avoids admit/preempt ping-pong under pressure.
+
+        With a prefix-cache ``hit`` only the cold suffix's pages must be
+        found: the shared run is already resident.  Spendable headroom is
+        free pages plus what the cache can reclaim, *minus* the hit's
+        cache-only pages — attaching pins those, so counting them as
+        reclaimable too would promise the same page twice."""
         if self.num_free == 0 or prompt_len > self.max_len:
             return False
         imminent = sum(
             1 for s in active_slots
             if self.lengths[s] >= self._pages_held[s] * self.page_size)
-        return self.free_pages >= self.pages_for(prompt_len) + imminent
+        need = self.pages_for(prompt_len)
+        avail = self.free_pages + self.reclaimable_pages
+        if hit is not None and hit.pages:
+            need -= len(hit.pages)
+            avail -= hit.pinned
+        return avail >= need + imminent
 
     def can_ever_serve(self, n_tokens: int) -> bool:
         """Whether a request resident at `n_tokens` could ever fit an
@@ -316,26 +362,82 @@ class PagedKVCachePool:
         return self._free.pop()
 
     def free(self, slot: int) -> None:
+        """Release `slot` and drop one reference on each of its pages —
+        shared prefix pages another request (or the cache) still holds
+        stay resident; sole-owner pages return to the free list."""
         if not 0 <= slot < self.num_slots:
             raise ValueError(f"slot {slot} out of range")
         if self._free.is_free(slot):
             raise ValueError(f"slot {slot} is already free")
         for i in range(int(self._pages_held[slot])):
-            self._free_pages.push(int(self.page_table[slot, i]))
+            self.release_page(int(self.page_table[slot, i]))
         self.page_table[slot] = 0       # dead writes land in junk page 0
         self._pages_held[slot] = 0
         self.lengths[slot] = 0
         self._free.push(slot)
+        if self.prefix_cache is not None:
+            # this free may have turned shared pages into cache-only ones;
+            # keep the cache inside its LRU pin budget
+            self.prefix_cache.enforce_budget()
+
+    def release_page(self, page: int) -> None:
+        """Drop one reference on `page`; free it at refcount zero.  A
+        cache-pinned page whose last request-reference just left becomes
+        reclaimable (the cache's own reference keeps it resident)."""
+        self.page_refs[page] -= 1
+        if self.page_refs[page] == 0:
+            self._free_pages.push(page)
+        elif self.page_refs[page] < 0:
+            raise ValueError(f"page {page} released below zero references")
+        elif self.page_refs[page] == 1 and self.page_cached[page]:
+            self._cache_only += 1
+
+    def pin_page(self, page: int) -> None:
+        """The prefix cache takes its reference on `page` (cell insert);
+        the inserting request still holds it, so it is shared, not
+        cache-only."""
+        self.page_refs[page] += 1
+        self.page_cached[page] = True
+
+    def unpin_page(self, page: int) -> None:
+        """The prefix cache drops its reference on `page` (cell evict)."""
+        if self.page_refs[page] == 1:
+            self._cache_only -= 1
+        self.page_cached[page] = False
+        self.release_page(page)
+
+    def adopt_run(self, slot: int, pages) -> None:
+        """Install a shared page run as the head of `slot`'s page table
+        (prefix-cache hit), taking one reference per page.  The slot must
+        hold nothing yet; ``reserve_prefix`` then extends it with the
+        cold suffix's own pages."""
+        if self._pages_held[slot]:
+            raise ValueError(
+                f"slot {slot} already holds {self._pages_held[slot]} pages; "
+                f"a shared run must be adopted first")
+        for i, page in enumerate(pages):
+            if self.page_refs[page] == 1 and self.page_cached[page]:
+                self._cache_only -= 1   # cache-only -> shared again
+            self.page_refs[page] += 1
+            self.page_table[slot, i] = page
+        self._pages_held[slot] = len(pages)
 
     def _grow(self, slot: int) -> bool:
-        """Append one page to `slot`; False when the pool is starved."""
+        """Append one page to `slot`; False when the pool is starved.
+        A starved free list reclaims LRU cache-only prefix pages first —
+        the cache layer gives way before any request is preempted."""
         held = int(self._pages_held[slot])
         if held >= self.max_pages:
             raise PoolExhausted(
                 f"slot {slot} already holds max_pages={self.max_pages}")
+        if not self._free_pages and self.prefix_cache is not None:
+            self.prefix_cache.reclaim(1)
         if not self._free_pages:
             return False
-        self.page_table[slot, held] = self._free_pages.pop()
+        page = self._free_pages.pop()
+        self.page_refs[page] = 1
+        self.page_cached[page] = False
+        self.page_table[slot, held] = page
         self._pages_held[slot] = held + 1
         return True
 
@@ -367,7 +469,8 @@ class PagedKVCachePool:
             raise ValueError(
                 f"prefix of {n_tokens} tokens > pool max_len {self.max_len}")
         need = self.pages_for(n_tokens)
-        if need - int(self._pages_held[slot]) > self.free_pages:
+        if need - int(self._pages_held[slot]) > \
+                self.free_pages + self.reclaimable_pages:
             raise PoolExhausted(
                 f"prefix of {n_tokens} tokens needs {need} pages, "
                 f"{self.free_pages} free")

@@ -29,9 +29,19 @@ identical to the blocking path.  Blocking mode itself is just the
 degenerate manager: one chunk covering the whole (bucketed) prompt,
 drained inline at admission.
 
+When the pool carries a shared-prefix cache
+(``serving/prefix_cache.PrefixCache``), ``submit`` probes it first: a hit
+installs the cached page run into the slot by pointer copy and starts the
+ingest cursor *past* the shared prefix, so only the cold suffix is ever
+cut into chunks — zero chunk steps and zero KV writes for the reused
+part.  The final chunk of every prompt registers its fully-covered pages
+back into the cache, so the first request over a prefix pays for all its
+successors.
+
 Counters (chunks run, tokens ingested, distinct compiled buckets, queue
-peak) feed ``Scheduler.stats`` — the observability the tuner's chunk-size
-choice is judged against.
+peak, cache hits/misses/saved tokens) feed ``Scheduler.stats`` — the
+observability the tuner's chunk-size and cache-budget choices are judged
+against.
 """
 
 from __future__ import annotations
@@ -100,17 +110,34 @@ class PrefillManager:
         router's least-loaded policy charges against free capacity."""
         return sum(j.remaining for j in self.jobs)
 
+    @property
+    def prefix_cache(self):
+        """The pool's attached shared-prefix cache (None when disabled)."""
+        return getattr(self.pool, "prefix_cache", None)
+
     # -- lifecycle -----------------------------------------------------------
     def submit(self, entry, st, prompt: np.ndarray) -> PrefillJob:
-        """Reserve the slot and the prompt's pages, queue the job."""
+        """Reserve the slot and the prompt's pages, queue the job.
+
+        A prefix-cache hit adopts the shared page run first (pointer
+        copies + a reference per page) and reserves pages only for the
+        cold suffix; the job's cursor starts past the cached tokens, so
+        its chunks cover the suffix alone."""
+        prompt = np.asarray(prompt, np.int32)
         slot = self.pool.alloc()
+        cached = 0
+        if self.prefix_cache is not None:
+            cached = self.prefix_cache.attach(
+                slot, prompt, getattr(entry, "probe_hit", None))
         try:
             self.pool.reserve_prefix(slot, len(prompt))
         except Exception:
-            self.pool.free(slot)
+            self.pool.free(slot)   # also drops the shared run's references
             raise
-        job = PrefillJob(entry=entry, st=st,
-                         prompt=np.asarray(prompt, np.int32), slot=slot)
+        if cached:
+            self.pool.set_length(slot, cached)
+        job = PrefillJob(entry=entry, st=st, prompt=prompt, slot=slot,
+                         done=cached)
         self.jobs.append(job)
         self.queue_peak = max(self.queue_peak, len(self.jobs))
         return job
@@ -151,6 +178,10 @@ class PrefillManager:
         # of non-active slots are never consulted for decode growth)
         self.pool.set_length(job.slot, job.done)
         if job.done == len(job.prompt):
+            if self.prefix_cache is not None:
+                # the run is fully written and read-only from here on:
+                # register its prompt-covered pages for future sharers
+                self.prefix_cache.insert(job.prompt, job.slot)
             return logits
         return None
 

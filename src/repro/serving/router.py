@@ -60,6 +60,7 @@ from collections import deque
 import numpy as np
 
 from repro.serving.pool import PoolExhausted
+from repro.serving.prefix_cache import prefix_key
 from repro.serving.sampling import K_CAP
 from repro.serving.scheduler import (RoundClock, Scheduler, VirtualClock,
                                      _Entry)
@@ -74,10 +75,13 @@ def prefix_replica(prompt, n_replicas: int, prefix_len: int = 8) -> int:
     (SHA-256 — stable across processes, unlike ``hash()``); the replica
     with the highest score wins.  Growing the fleet from N to N+1 only
     ever moves a prefix *to the new replica*, never between survivors.
+    The hashed bytes are ``prefix_key`` — the same key the per-replica
+    prefix KV cache uses, so a prompt that routes by its prefix lands on
+    the replica whose cache holds that prefix.
     """
     if n_replicas < 1:
         raise ValueError(n_replicas)
-    key = np.asarray(prompt, np.int32)[:prefix_len].tobytes()
+    key = prefix_key(prompt, prefix_len)
     return max(range(n_replicas), key=lambda i: _affinity_score(key, i))
 
 
@@ -107,10 +111,12 @@ class RouterStats:
     @property
     def imbalance(self) -> float:
         """Load imbalance: max/mean of per-replica peak resident KV tokens
-        (1.0 = perfectly balanced; only meaningful for N > 1)."""
+        (1.0 = perfectly balanced; only meaningful for N > 1).  A fleet
+        that saw no traffic at all has no balance to speak of — that is
+        ``nan``, not a fake-perfect 1.0 a dashboard would wave through."""
         peaks = [s.peak_resident_tokens for s in self.replica_stats]
         mean = sum(peaks) / max(len(peaks), 1)
-        return max(peaks) / mean if mean > 0 else 1.0
+        return max(peaks) / mean if mean > 0 else float("nan")
 
     @property
     def mean_ttft_steps(self) -> float:
@@ -125,6 +131,29 @@ class RouterStats:
         return sum(s.prefill_chunks for s in self.replica_stats)
 
     @property
+    def prefill_tokens(self) -> int:
+        """Prompt tokens the fleet actually ran through chunk steps —
+        cache hits shrink this without touching the token streams."""
+        return sum(s.prefill_tokens for s in self.replica_stats)
+
+    @property
+    def prefix_hits(self) -> int:
+        return sum(s.prefix_hits for s in self.replica_stats)
+
+    @property
+    def prefix_misses(self) -> int:
+        return sum(s.prefix_misses for s in self.replica_stats)
+
+    @property
+    def prefill_tokens_saved(self) -> int:
+        return sum(s.prefill_tokens_saved for s in self.replica_stats)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        n = self.prefix_hits + self.prefix_misses
+        return self.prefix_hits / n if n else 0.0
+
+    @property
     def overlap_steps(self) -> int:
         """Scheduler ticks, fleet-wide, that ingested a prompt chunk AND
         decoded — the overlap chunked prefill exists to create."""
@@ -134,6 +163,9 @@ class RouterStats:
         per = ", ".join(f"r{i}:{s.generated_tokens}t"
                         for i, s in enumerate(self.replica_stats))
         re = f", {self.reroutes} reroutes" if self.reroutes else ""
+        if self.prefix_hits:
+            re += (f", {self.prefix_hits} prefix hits "
+                   f"({self.prefill_tokens_saved}t prefill saved)")
         return (f"{len(self.results)} requests over "
                 f"{len(self.replica_stats)} replicas, "
                 f"{self.generated_tokens} tokens in {self.wall_s:.3f}s -> "
@@ -188,7 +220,7 @@ class ReplicaRouter:
               max_len: int = 128, seed: int = 0, eos_id: int | None = None,
               policy: str = "least_loaded", page_size: int = 0,
               num_pages: int = 0, prefill_chunk: int | None = None,
-              log=print) -> "ReplicaRouter":
+              prefix_cache: bool = False, log=print) -> "ReplicaRouter":
         """Build an N-replica fleet, splitting the tuner budget N ways.
 
         ``kv_layout`` may be comma-separated (``"paged,contiguous"``) and
@@ -211,7 +243,9 @@ class ReplicaRouter:
                     arch=arch, target=target, num_slots=num_slots,
                     max_len=max_len, seed=seed, eos_id=eos_id,
                     kv_layout=lay, page_size=page_size, num_pages=num_pages,
-                    replicas=replicas, prefill_chunk=prefill_chunk, log=log)
+                    replicas=replicas, prefill_chunk=prefill_chunk,
+                    # mixed fleets: the cache only applies to paged slots
+                    prefix_cache=prefix_cache and lay == "paged", log=log)
             fleet.append(built[lay])
         return cls(fleet, policy=policy, log=log)
 
@@ -253,9 +287,10 @@ class ReplicaRouter:
             # does not masquerade as free
             return max(ready, key=lambda i: (scheds[i].free_tokens, -i))
         # prefix_affinity: highest rendezvous score among the admittable —
-        # the preferred replica when it has room, its runner-up otherwise
-        key = np.asarray(entry.req.prompt,
-                         np.int32)[:self.prefix_len].tobytes()
+        # the preferred replica when it has room, its runner-up otherwise.
+        # Keyed by prefix_key, the same bytes the per-replica prefix KV
+        # cache hashes, so sharers colocate with their cached run.
+        key = prefix_key(entry.req.prompt, self.prefix_len)
         return max(ready, key=lambda i: _affinity_score(key, i))
 
     # -- dispatch ------------------------------------------------------------
@@ -301,7 +336,8 @@ class ReplicaRouter:
 
     # -- main loop -----------------------------------------------------------
     def run(self, requests, policy: str = "continuous",
-            prefill_chunk: int | None = None) -> RouterStats:
+            prefill_chunk: int | None = None,
+            prefix_cache: bool | None = None) -> RouterStats:
         """Drain `requests` across the fleet under scheduling `policy`
         (``continuous`` refills replicas between steps; ``static`` gang-
         fills only idle replicas).  Fresh pools per run, like the engine.
@@ -309,7 +345,12 @@ class ReplicaRouter:
         ``prefill_chunk`` overrides every replica's prompt-ingestion
         grain (None: each engine's own setting; 0: blocking full-prompt
         prefill at dispatch — the old fleet-stalling cadence, kept as
-        the TTFT baseline).
+        the TTFT baseline).  ``prefix_cache`` likewise overrides the
+        per-replica shared-prefix KV cache (None: each engine's own
+        setting) — caches are per replica, which composes with
+        ``prefix_affinity`` colocating sharers on one replica.  In a
+        mixed-layout fleet the override applies to the paged replicas
+        only; contiguous pools have no pages to share.
 
         The fleet shares one virtual step clock: blocking prefills at
         dispatch advance it serially (they run one after another on the
@@ -319,7 +360,10 @@ class ReplicaRouter:
         not the sum."""
         requests = list(requests)
         shared = VirtualClock()
-        scheds = [Scheduler(e.make_pool(), e.prefill_fn, e.decode_fn,
+        scheds = [Scheduler(e.make_pool(prefix_cache=(
+                                prefix_cache if e.kv_layout == "paged"
+                                else None)),
+                            e.prefill_fn, e.decode_fn,
                             eos_id=e.eos_id, policy=policy,
                             sampler=e.sampler, clock=self.clock,
                             chunk_step_fn=getattr(e, "chunk_fn", None),

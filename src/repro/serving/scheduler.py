@@ -185,6 +185,11 @@ class ServeStats:
     prefill_queue_peak: int = 0   # max requests mid-prefill at once
     overlap_steps: int = 0        # steps that both chunked AND decoded
     mean_ttft_steps: float = 0.0  # mean virtual-clock time to first token
+    # shared-prefix KV cache observability (zeros with the cache off)
+    prefix_hits: int = 0          # admissions that reused a cached run
+    prefix_misses: int = 0        # admissions with no cached prefix
+    prefill_tokens_saved: int = 0  # prompt tokens skipped via cache hits
+    prefix_evictions: int = 0     # cache cells reclaimed under pressure
 
     @property
     def tokens_per_s(self) -> float:
@@ -193,6 +198,9 @@ class ServeStats:
     def summary(self) -> str:
         lat = [r.latency_s for r in self.results]
         pre = f", {self.preemptions} preemptions" if self.preemptions else ""
+        if self.prefix_hits:
+            pre += (f", {self.prefix_hits} prefix hits "
+                    f"({self.prefill_tokens_saved}t prefill saved)")
         return (f"{len(self.results)} requests, {self.generated_tokens} tokens "
                 f"in {self.wall_s:.3f}s -> {self.tokens_per_s:.1f} tok/s | "
                 f"{self.decode_steps} decode steps, "
@@ -211,6 +219,9 @@ class _Entry:
     req: Request
     st: RequestResult | None = None
     rerouted: bool = False
+    probe_hit: object = None      # prefix-cache probe from the can_admit
+    #                               immediately preceding _admit — attach
+    #                               reuses it instead of re-walking keys
 
     @property
     def pending_len(self) -> int:
@@ -218,6 +229,16 @@ class _Entry:
         already generated before a preemption."""
         n = len(self.req.prompt)
         return n + len(self.st.tokens) if self.st is not None else n
+
+    def pending_tokens(self) -> np.ndarray:
+        """The token prefix a (re-)admission must ingest — the prompt,
+        plus everything generated before a preemption (a resume
+        re-prefills both; the prefix cache keys on exactly these)."""
+        prompt = np.asarray(self.req.prompt, np.int32)
+        if self.st is not None and self.st.tokens:
+            return np.concatenate(
+                [prompt, np.asarray(self.st.tokens, np.int32)])
+        return prompt
 
     def remaining_new(self) -> int:
         """Generation budget left (fresh entries: the full request ask)."""
@@ -363,8 +384,24 @@ class Scheduler:
             jnp.asarray(rids), jnp.asarray(steps)))
 
     # -- admission ---------------------------------------------------------
+    def _probe_prefix(self, entry: _Entry):
+        """Read-only shared-prefix cache probe for `entry` (None when no
+        cache is attached or prefill bypasses the chunk pipeline)."""
+        cache = getattr(self.pool, "prefix_cache", None)
+        if cache is None or self._mgr is None:
+            return None
+        return cache.probe(entry.pending_tokens())
+
     def can_admit(self, entry: _Entry) -> bool:
-        return self.pool.can_admit(entry.pending_len, tuple(self.active))
+        """Admission asks the pool for the entry's *cold* footprint: with
+        a prefix-cache hit only the un-cached suffix needs fresh pages.
+        The probe rides on the entry so the ``_admit`` that immediately
+        follows a True answer attaches it without re-walking the keys
+        (a router's losing replicas overwrite it; the winner re-probes
+        in ``try_admit`` right before admitting, so it is never stale)."""
+        entry.probe_hit = self._probe_prefix(entry)
+        return self.pool.can_admit(entry.pending_len, tuple(self.active),
+                                   hit=entry.probe_hit)
 
     def try_admit(self, entry: _Entry) -> bool:
         """Router-facing single-entry admission; False when full."""
@@ -389,23 +426,25 @@ class Scheduler:
                 max_new_tokens=min(req.max_new_tokens, budget),
                 t_submit=getattr(req, "_t_submit", now), v_submit=self._v0)
             st.t_admit = now
-            prompt = np.asarray(req.prompt, np.int32)
+            prompt = entry.pending_tokens()
         else:                                    # resume after preemption
             st = entry.st
-            prompt = np.concatenate([np.asarray(req.prompt, np.int32),
-                                     np.asarray(st.tokens, np.int32)])
+            prompt = entry.pending_tokens()
         if self._mgr is not None:
             # pool-direct prefill: the slot and the prompt's pages are
             # reserved NOW (the same decision point blocking admission
-            # reserved at, so admission order and token streams match)
+            # reserved at, so admission order and token streams match);
+            # a prefix-cache hit inside submit leaves only the cold
+            # suffix for the chunk pipeline
             job = self._mgr.submit(entry, st, prompt)
             job.admit_step = self._steps
             if self.prefill_chunk:
                 return                           # chunks interleave in step()
-            # blocking: whole prompt as one chunk, inline — priced on the
-            # virtual clock at its chunk-equivalent cost, *serially* (it
-            # runs on the driver thread and stalls the lockstep loop)
-            self.vclock.advance_serial(-(-len(prompt) // self.chunk_unit))
+            # blocking: the un-cached remainder as one chunk, inline —
+            # priced on the virtual clock at its chunk-equivalent cost,
+            # *serially* (it runs on the driver thread and stalls the
+            # lockstep loop)
+            self.vclock.advance_serial(-(-job.remaining // self.chunk_unit))
             self._finish_prefill(job, self._mgr.drain(job))
             return
         # legacy path (no chunk step): prefill to a contiguous (1, s)
@@ -573,6 +612,7 @@ class Scheduler:
         done = sorted(self.done, key=lambda r: r.rid)
         ttfts = [r.ttft_steps for r in done if r.v_first >= 0]
         mgr = self._mgr
+        pc = getattr(self.pool, "prefix_cache", None)
         return ServeStats(
             results=done, wall_s=wall, decode_steps=self._steps,
             generated_tokens=sum(len(r.tokens) for r in done),
@@ -584,7 +624,11 @@ class Scheduler:
             prefill_compiles=len(mgr.compiled_buckets) if mgr else 0,
             prefill_queue_peak=mgr.queue_peak if mgr else 0,
             overlap_steps=self._overlap,
-            mean_ttft_steps=float(np.mean(ttfts)) if ttfts else 0.0)
+            mean_ttft_steps=float(np.mean(ttfts)) if ttfts else 0.0,
+            prefix_hits=pc.hits if pc else 0,
+            prefix_misses=pc.misses if pc else 0,
+            prefill_tokens_saved=pc.tokens_saved if pc else 0,
+            prefix_evictions=pc.evictions if pc else 0)
 
     # -- main loop ---------------------------------------------------------
     def run(self, requests) -> ServeStats:

@@ -67,6 +67,38 @@ def longprompt_trace(n: int, vocab_size: int, *, max_prompt: int = 128,
     return reqs
 
 
+def sharedprefix_trace(n: int, vocab_size: int, *, n_heads: int = 4,
+                       head_len: int = 32, max_suffix: int = 24,
+                       max_new: int = 8, alpha: float = 1.2, seed: int = 0,
+                       temperature: float = 0.0,
+                       top_k: int = 0) -> list[Request]:
+    """n requests whose prompts open with one of ``n_heads`` shared heads.
+
+    Head popularity is Zipf-clustered (head 0 dominates, like a fleet
+    where most traffic shares one system preamble and a tail of few-shot
+    templates splits the rest), and each request appends a private
+    Zipf-length suffix of at least one token.  ``head_len`` defaults to
+    two 16-token KV pages, so a page-aligned prefix cache has whole
+    pages to reuse — the regime the shared-prefix cache is judged in.
+    Deterministic for a fixed seed, like every trace here.
+    """
+    rng = np.random.RandomState(seed)
+    heads = rng.randint(1, max(vocab_size - 1, 2),
+                        size=(n_heads, head_len)).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        h = min(int(rng.zipf(alpha)) - 1, n_heads - 1)
+        slen = int(np.clip(rng.zipf(alpha), 1, max_suffix))
+        suffix = rng.randint(1, max(vocab_size - 1, 2),
+                             size=(slen,)).astype(np.int32)
+        nnew = int(np.clip(rng.zipf(alpha), 1, max_new))
+        reqs.append(Request(rid=i,
+                            prompt=np.concatenate([heads[h], suffix]),
+                            max_new_tokens=nnew,
+                            temperature=temperature, top_k=top_k))
+    return reqs
+
+
 def uniform_trace(n: int, vocab_size: int, *, prompt_len: int = 16,
                   max_new: int = 8, seed: int = 0,
                   temperature: float = 0.0, top_k: int = 0) -> list[Request]:

@@ -214,9 +214,15 @@ def build_decode_step_slots_paged(model, mesh=None):
     re-uploaded per step.
     """
     def decode_step(params, cache, tokens, active, pages):
-        logits, new_cache = model.decode_step(
-            params, dict(cache, pages=pages), tokens, mesh)
         keep = active.astype(bool)
+        # inactive rows (freed slots, or slots mid-prefill whose device
+        # index is stale) must not write through their page table: with a
+        # shared-prefix cache a stale-index write would land inside a
+        # read-only page other requests attend, so their rows divert to
+        # the reserved junk page 0 — same place zeroed rows already write
+        safe_pages = jnp.where(keep[:, None], pages, 0)
+        logits, new_cache = model.decode_step(
+            params, dict(cache, pages=safe_pages), tokens, mesh)
         new_index = jnp.where(keep, new_cache["index"], cache["index"])
         return logits, {"k": new_cache["k"], "v": new_cache["v"],
                         "index": new_index}
