@@ -24,12 +24,19 @@ traffic lives in):
    **TTFT step proxy** (virtual clock: one unit per jitted invocation,
    blocking prefills priced serially at their chunk-equivalents, round
    cost = busiest replica) — chunked must be strictly lower.
-5. **cold vs prefix-cached shared prefixes** (this PR): a trace whose
+5. **cold vs prefix-cached shared prefixes** (PR 5): a trace whose
    prompts open with Zipf-clustered shared heads (``sharedprefix_trace``)
    through a paged ``prefix_affinity`` fleet with the shared-prefix KV
    cache off vs on.  The cached fleet must prefill strictly fewer
    prompt tokens (hit rate > 0) while emitting bit-identical token
    streams — reuse is free or it is a bug.
+6. **gather vs fused-kernel paged decode** (this PR): the same tight
+   paged trace with ``kv_kernel='pallas'`` — the fused Pallas
+   paged-attention kernel walking the page table in-kernel instead of
+   materializing the (slots, max_pages*page_size, K, dh) gather each
+   tick.  Gated to be token-identical to the gather cell; wall time on
+   CPU is interpret-mode emulation (the bytes-moved win is quoted by
+   ``benchmarks/kernel_bench.py``'s ``kernel_paged_decode_*`` cells).
 
 The layout x policy grid cells run with ``prefill_chunk=0`` (blocking)
 so their decode-step counts stay comparable across baselines; the
@@ -92,11 +99,11 @@ def _register_tight_target(max_len: int = MAX_LEN) -> str:
 
 
 def _engine(kv_layout: str, target: str = "local:cpu", slots: int = SLOTS,
-            max_len: int = MAX_LEN):
+            max_len: int = MAX_LEN, kv_kernel: str = "auto"):
     from repro.serving import ServeEngine
     return ServeEngine(arch=ARCH, target=target, num_slots=slots,
                        max_len=max_len, seed=0, kv_layout=kv_layout,
-                       log=lambda *a, **k: None)
+                       kv_kernel=kv_kernel, log=lambda *a, **k: None)
 
 
 def _pool_bytes(engine) -> int:
@@ -277,6 +284,7 @@ def run_smoke(out_path: str = "BENCH_serving.json",
     tight = _register_tight_target()
     cells = {}
     single_cont = single_paged = None
+    paged_cont_stats = None
     for layout in ("contiguous", "paged"):
         engine = _engine(layout, target=tight)
         if layout == "contiguous":
@@ -290,6 +298,8 @@ def run_smoke(out_path: str = "BENCH_serving.json",
             # comparable with pre-chunking baselines; the longprompt
             # cells below track the chunked path
             stats = engine.run(reqs, policy=policy, prefill_chunk=0)
+            if layout == "paged" and policy == "continuous":
+                paged_cont_stats = stats
             cells[f"{layout}_{policy}"] = {
                 "tokens_per_s": round(stats.tokens_per_s, 2),
                 "tokens_per_step": round(
@@ -305,6 +315,31 @@ def run_smoke(out_path: str = "BENCH_serving.json",
                 "preemptions": stats.preemptions,
                 "mean_ttft_steps": round(stats.mean_ttft_steps, 4),
             }
+    # paged decode through the fused Pallas paged-attention kernel (page
+    # table walked in-kernel, interpret mode on CPU): same trace, same
+    # tight budget — gated below to be token-identical to the gather
+    # paged_continuous cell, and recorded so the kernel path has a
+    # throughput baseline from day one
+    e_kernel = _engine("paged", target=tight, kv_kernel="pallas")
+    kreqs = _trace(n_requests, e_kernel, max_new=max_new)
+    e_kernel.run(kreqs, policy="continuous", prefill_chunk=0)   # warm jits
+    kstats = e_kernel.run(kreqs, policy="continuous", prefill_chunk=0)
+    cells["paged_continuous_kernel"] = {
+        "tokens_per_s": round(kstats.tokens_per_s, 2),
+        "tokens_per_step": round(
+            kstats.generated_tokens / max(kstats.decode_steps, 1), 4),
+        "hbm_bytes_per_admitted_token":
+            round(_bytes_per_token(e_kernel, kstats), 1),
+        "pool_bytes": _pool_bytes(e_kernel),
+        "slots": e_kernel.num_slots,
+        "kv_kernel": e_kernel.kv_kernel,
+        "decode_steps": kstats.decode_steps,
+        "generated_tokens": kstats.generated_tokens,
+        "occupancy": round(kstats.occupancy, 4),
+        "peak_active": kstats.peak_active,
+        "preemptions": kstats.preemptions,
+        "mean_ttft_steps": round(kstats.mean_ttft_steps, 4),
+    }
     # router fleet: FLEET tight contiguous replicas, least-loaded routing,
     # same trace — fleet tok/s, aggregate in-flight, and load imbalance
     # no extra warm pass: the fleet reuses single_cont's already-warmed
@@ -390,6 +425,7 @@ def run_smoke(out_path: str = "BENCH_serving.json",
     out = {"arch": ARCH, "target": tight, "n_requests": n_requests,
            "max_len": MAX_LEN, "trace_seed": TRACE_SEED, "cells": cells}
     pc = cells["paged_continuous"]
+    pk = cells["paged_continuous_kernel"]
     rc = cells[f"router_least_loaded_x{FLEET}"]
     lb = cells["longprompt_router_blocking"]
     lc = cells["longprompt_router_chunked"]
@@ -397,7 +433,8 @@ def run_smoke(out_path: str = "BENCH_serving.json",
     sh = cells["sharedprefix_router_cached"]
     print(f"paged {pc['tokens_per_s']} tok/s @ "
           f"{pc['hbm_bytes_per_admitted_token']} B/tok, peak "
-          f"{pc['peak_active']} | contiguous {cc['tokens_per_s']} tok/s @ "
+          f"{pc['peak_active']} (fused kernel {pk['tokens_per_s']} tok/s, "
+          f"token-identical) | contiguous {cc['tokens_per_s']} tok/s @ "
           f"{cc['hbm_bytes_per_admitted_token']} B/tok, peak "
           f"{cc['peak_active']} | router x{FLEET} {rc['tokens_per_s']} "
           f"tok/s fleet, peak {rc['peak_in_flight']} "
@@ -427,6 +464,11 @@ def run_smoke(out_path: str = "BENCH_serving.json",
                 f"than blocking's {lb['mean_ttft_steps']} on the "
                 f"long-prompt trace")
         sp_tok = lambda stats: [r.tokens for r in stats.results]  # noqa: E731
+        if sp_tok(kstats) != sp_tok(paged_cont_stats):
+            raise SystemExit(
+                "SMOKE FAIL: fused-kernel paged token streams differ from "
+                "the gather path on the same trace — the kernel must be "
+                "token-identical")
         if sp_tok(sp_hot) != sp_tok(sp_cold):
             raise SystemExit(
                 "SMOKE FAIL: prefix-cached token streams differ from the "

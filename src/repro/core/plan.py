@@ -37,6 +37,8 @@ class DeploymentPlan:
     serve_prefill_chunk: int = 0          # prompt tokens ingested per decode tick
     serve_prefix_cache_pages: int = 0     # paged KV: LRU pin cap for the
     #                                       shared-prefix cache (same pool)
+    serve_kv_kernel: str = ""             # paged decode attn: gather | pallas
+    #                                       ("" = n/a / contiguous layout)
     sharding_fallbacks: list = dataclasses.field(default_factory=list)
     napkin: dict = dataclasses.field(default_factory=dict)
     notes: list = dataclasses.field(default_factory=list)
@@ -82,6 +84,9 @@ class DeploymentPlan:
             lines.append(f"  serve prefix $  : up to "
                          f"{self.serve_prefix_cache_pages} pages LRU-pinned "
                          f"for shared-prefix reuse (paged layout)")
+        if self.serve_kv_kernel:
+            lines.append(f"  serve kv kernel : {self.serve_kv_kernel} "
+                         f"(paged decode attention)")
         if self.napkin:
             lines.append("  napkin math:")
             for k, v in self.napkin.items():

@@ -288,6 +288,25 @@ def tune(cfg: ModelConfig, shape: ShapeConfig, target: TargetSpec,
                     f"an expected {expected_len}-token prompt re-prefills "
                     f"{expected_len - aligned} instead of {expected_len} "
                     f"tokens (~{saved} of {stall} chunk steps saved)")
+            # --- paged decode attention kernel -----------------------------
+            # Pallas targets get the fused paged-attention kernel (page
+            # table walked in-kernel); reference targets keep the
+            # gather-then-attend read.  The napkin quotes what the gather
+            # materializes per decode tick: the full worst-case
+            # (slots, max_pages*page_size, K, dh) K/V read, vs the fused
+            # kernel touching only pages each slot actually holds.
+            plan.serve_kv_kernel = \
+                "pallas" if target.kernels == "pallas" else "gather"
+            slot_cap = math.ceil(shape.seq_len / page_size) * page_size
+            gather_bytes = kv_per_token * plan.serve_slots * slot_cap / chips
+            fused_bytes_est = \
+                kv_per_token * plan.serve_slots * expected_len / chips
+            plan.napkin["serve_kv_kernel"] = (
+                f"{plan.serve_kv_kernel}: gather materializes "
+                f"{gather_bytes/1e9:.3f} GB/chip of K/V per decode tick "
+                f"(worst-case page runs); fused pallas streams only held "
+                f"pages (~{fused_bytes_est/1e9:.3f} GB/chip at expected "
+                f"lengths)")
             # fleet capacity: what N replicas hold together, in tokens —
             # the quantity a router's least-loaded policy balances
             fleet_tokens = replicas * usable_tokens

@@ -58,7 +58,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     l_prev = l_ref[...]
     m_cur = jnp.max(s, axis=-1)
     m_new = jnp.maximum(m_prev, m_cur)
-    p = jnp.exp(s - m_new[:, None])
+    # explicit zero under the mask: a block whose every key is masked
+    # before any finite max was seen leaves m_new at NEG_INF, and
+    # exp(s - m_new) = exp(NEG_INF - NEG_INF) = 1 for the masked entries
+    # — poisoning l/acc.  Unreachable on square causal grids (block 0
+    # always holds key 0), live as soon as kv_len < a block's start.
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
     corr = jnp.exp(m_prev - m_new)
     l_new = l_prev * corr + jnp.sum(p, axis=-1)
     acc_ref[...] = acc_ref[...] * corr[:, None] + \
@@ -75,9 +80,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, block_q: int = 128,
-                           block_k: int = 128,
+                           block_k: int = 128, kv_len: int | None = None,
                            interpret: bool = True) -> jax.Array:
     """q: (b, s, H, dh); k/v: (b, t, K, dh), H % K == 0. Returns (b, s, H, dh).
+
+    kv_len: optional valid length of the kv sequence (< t with a padded
+    cache); key blocks past it are fully masked.  A row with no valid key
+    at all returns zeros.
 
     interpret=True executes the kernel body on CPU (validation); on a real
     TPU pass interpret=False.
@@ -88,12 +97,13 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     block_q = min(block_q, s)
     block_k = min(block_k, t)
     assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
+    assert kv_len is None or 0 <= kv_len <= t, (kv_len, t)
     nq, nk = s // block_q, t // block_k
     scale = 1.0 / math.sqrt(dh)
 
     kernel = functools.partial(
         _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
-        causal=causal, seq_k=t)
+        causal=causal, seq_k=t if kv_len is None else kv_len)
 
     return pl.pallas_call(
         kernel,

@@ -12,6 +12,7 @@ from functools import partial
 import jax
 
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.sedov_stencil import cfl_dt, sedov_step_pallas
 
@@ -20,12 +21,28 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "kv_len",
+                                   "interpret"))
 def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool | None = None):
+                    block_k: int = 128, kv_len: int | None = None,
+                    interpret: bool | None = None):
     interpret = _default_interpret() if interpret is None else interpret
     return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
-                                  block_k=block_k, interpret=interpret)
+                                  block_k=block_k, kv_len=kv_len,
+                                  interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, page_table, kv_len,
+                    interpret: bool | None = None):
+    """Fused paged decode attention (see kernels/paged_attention.py).
+
+    q: (slots, H, dh); k_pages/v_pages: (num_pages, page_size, K, dh);
+    page_table: (slots, max_pages) int32; kv_len: (slots,) int32.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    return paged_attention_pallas(q, k_pages, v_pages, page_table, kv_len,
+                                  interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))

@@ -25,6 +25,37 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, s, H, dh).astype(q.dtype)
 
 
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        page_table: jax.Array, kv_len: jax.Array) -> jax.Array:
+    """Gather-then-attend oracle for the fused paged decode kernel.
+
+    Materializes each slot's KV run through the page table — exactly the
+    unfused read the kernel eliminates — then runs full-softmax attention
+    in fp32 with per-slot length masks.  Freed slots (page-table rows all
+    junk page 0 / kv_len 0) return exactly zero, matching the kernel.
+    """
+    slots, H, dh = q.shape
+    _, psize, K, _ = k_pages.shape
+    G = H // K
+    max_pages = page_table.shape[1]
+    t = max_pages * psize
+    k_all = jnp.take(k_pages, page_table, axis=0).reshape(slots, t, K, dh)
+    v_all = jnp.take(v_pages, page_table, axis=0).reshape(slots, t, K, dh)
+    qg = q.reshape(slots, K, G, dh)
+    scores = jnp.einsum("skgd,stkd->skgt", qg.astype(jnp.float32),
+                        k_all.astype(jnp.float32)) / math.sqrt(dh)
+    pos = jnp.arange(t)[None, None, None, :]
+    valid = pos < kv_len[:, None, None, None]
+    # page-0 entries are the reserved junk page: real tokens never live
+    # there, so mask any position routed through it
+    live = jnp.repeat(page_table != 0, psize, axis=1)[:, None, None, :]
+    mask = valid & live
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jnp.where(mask, jax.nn.softmax(scores, axis=-1), 0.0)
+    out = jnp.einsum("skgt,stkd->skgd", probs, v_all.astype(jnp.float32))
+    return out.reshape(slots, H, dh).astype(q.dtype)
+
+
 def rmsnorm_ref(x: jax.Array, w: jax.Array, *, eps: float = 1e-6) -> jax.Array:
     xf = x.astype(jnp.float32)
     y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)

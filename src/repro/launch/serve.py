@@ -61,8 +61,8 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
                top_k: int = 0, replicas: int = 1,
                route_policy: str = "least_loaded",
                prefill_chunk: int | None = None,
-               prefix_cache: bool = False, trace: str = "uniform",
-               log=print) -> dict:
+               prefix_cache: bool = False, kv_kernel: str = "auto",
+               trace: str = "uniform", log=print) -> dict:
     """Serve `requests` requests (default: one per slot) of `prefill_len`
     prompts, `decode_tokens` generations each.  Reports per-request latency
     and aggregate tokens/sec.  With ``replicas`` > 1 the requests flow
@@ -74,7 +74,9 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
     only) reuses cached shared-prefix page runs by pointer copy, so
     repeat prefixes skip their re-prefill entirely; pair it with
     ``trace='sharedprefix'`` (Zipf-clustered prompt heads) to see hits —
-    the default uniform trace draws unrelated prompts."""
+    the default uniform trace draws unrelated prompts.  ``kv_kernel``
+    picks the paged decode attention implementation (auto | gather |
+    pallas — see ``--kv-kernel`` help)."""
     cfg = get_config(arch)
     if trace not in TRACES:
         raise ValueError(f"trace {trace!r} not in {tuple(TRACES)}")
@@ -98,11 +100,13 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
             kv_layout=kv_layout, page_size=page_size,
             temperature=temperature, top_k=top_k, replicas=replicas,
             route_policy=route_policy, prefill_chunk=prefill_chunk,
-            prefix_cache=prefix_cache, trace=trace, log=log)
+            prefix_cache=prefix_cache, kv_kernel=kv_kernel, trace=trace,
+            log=log)
     engine = ServeEngine(arch=arch, target=target, num_slots=batch,
                          max_len=pool_len, seed=seed, kv_layout=kv_layout,
                          page_size=page_size, prefill_chunk=prefill_chunk,
-                         prefix_cache=prefix_cache, log=log)
+                         prefix_cache=prefix_cache, kv_kernel=kv_kernel,
+                         log=log)
     n = requests or engine.num_slots
     reqs = _make_trace(trace, n, cfg.vocab_size, prefill_len,
                        decode_tokens, seed, temperature, top_k,
@@ -115,6 +119,7 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
         "arch": arch, "batch": engine.num_slots, "prefill_len": prefill_len,
         "decode_tokens": decode_tokens, "mode": mode,
         "kv_layout": kv_layout,
+        "kv_kernel": engine.kv_kernel,
         "requests": len(stats.results),
         "decode_steps": stats.decode_steps,
         "occupancy": stats.occupancy,
@@ -144,7 +149,7 @@ def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
                        seed, mode, requests, pool_len, kv_layout, page_size,
                        temperature, top_k, replicas, route_policy,
                        prefill_chunk=None, prefix_cache=False,
-                       trace="uniform", log=print) -> dict:
+                       kv_kernel="auto", trace="uniform", log=print) -> dict:
     """Multi-replica path: ReplicaRouter over N tuner-split engines."""
     from repro.serving import ReplicaRouter
     cfg = get_config(arch)
@@ -152,7 +157,7 @@ def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
         arch=arch, target=target, replicas=replicas, kv_layout=kv_layout,
         num_slots=batch, max_len=pool_len, seed=seed, policy=route_policy,
         page_size=page_size, prefill_chunk=prefill_chunk,
-        prefix_cache=prefix_cache, log=log)
+        prefix_cache=prefix_cache, kv_kernel=kv_kernel, log=log)
     n = requests or batch * replicas
     reqs = _make_trace(trace, n, cfg.vocab_size, prefill_len,
                        decode_tokens, seed, temperature, top_k,
@@ -280,6 +285,19 @@ def main(argv=None):
                         "replicas (e.g. paged,contiguous)")
     p.add_argument("--page-size", type=int, default=0,
                    help="tokens per KV page (paged; default: tuner's)")
+    p.add_argument("--kv-kernel", choices=("auto", "gather", "pallas"),
+                   default="auto",
+                   help="paged decode attention implementation: 'gather' "
+                        "reads K/V back through the page table into a "
+                        "materialized (slots, max_pages*page_size, heads, "
+                        "dim) tensor before attending; 'pallas' runs the "
+                        "fused paged-attention kernel that walks the page "
+                        "table in-kernel (K/V stream page-by-page, online "
+                        "softmax in VMEM scratch) and never materializes "
+                        "the gather; 'auto' follows the tuner "
+                        "(plan.serve_kv_kernel: pallas targets get the "
+                        "kernel).  Token streams are identical either "
+                        "way; requires --kv-layout paged")
     p.add_argument("--replicas", type=int, default=1,
                    help="serve through a ReplicaRouter over N tuner-split "
                         "engines (1 = single engine)")
@@ -322,7 +340,8 @@ def main(argv=None):
                route_policy=a.route_policy,
                prefill_chunk=None if a.prefill_chunk < 0
                else a.prefill_chunk,
-               prefix_cache=a.prefix_cache, trace=a.trace)
+               prefix_cache=a.prefix_cache, kv_kernel=a.kv_kernel,
+               trace=a.trace)
 
 
 if __name__ == "__main__":

@@ -278,20 +278,34 @@ def attention(p: dict, x: jax.Array, cfg, mesh, *, positions: jax.Array,
             n_pages, psize = cache["k"].shape[0], cache["k"].shape[1]
             max_pages = pages.shape[1]
             Kh, dh = k.shape[2], k.shape[3]
-            logical_page = jnp.clip(idx // psize, 0, max_pages - 1)
-            dest = jnp.take_along_axis(pages, logical_page[:, None],
-                                       axis=1)[:, 0]            # (slots,)
-            fpos = dest * psize + idx % psize
+            logical_page = idx // psize
+            ok = logical_page < max_pages
+            dest = jnp.take_along_axis(
+                pages, jnp.minimum(logical_page, max_pages - 1)[:, None],
+                axis=1)[:, 0]                                   # (slots,)
+            # out-of-range writes (a slot already at its page-run capacity)
+            # route to the reserved junk page 0 — NOT wrapped into the
+            # slot's last page, which under the prefix cache may be shared
+            # with a live request (same ok-guard as the chunk path below)
+            fpos = jnp.where(ok, dest * psize + idx % psize, idx % psize)
             k_all = cache["k"].reshape(n_pages * psize, Kh, dh).at[fpos] \
                 .set(k[:, 0]).reshape(n_pages, psize, Kh, dh)
             v_all = cache["v"].reshape(n_pages * psize, Kh, dh).at[fpos] \
                 .set(v[:, 0]).reshape(n_pages, psize, Kh, dh)
-            kg = jnp.take(k_all, pages, axis=0).reshape(
-                q.shape[0], max_pages * psize, Kh, dh)
-            vg = jnp.take(v_all, pages, axis=0).reshape(
-                q.shape[0], max_pages * psize, Kh, dh)
-            out = dot_attention(q, kg, vg, causal=True, q_offset=idx,
-                                kv_len=idx + s)
+            if cache.get("use_kernel"):
+                # fused Pallas path: the page table is walked inside the
+                # kernel, so the materialized (slots, max_pages*psize, K,
+                # dh) gather below never hits HBM
+                from repro.kernels.ops import paged_attention
+                out = paged_attention(q[:, 0], k_all, v_all, pages,
+                                      (idx + s).astype(jnp.int32))[:, None]
+            else:
+                kg = jnp.take(k_all, pages, axis=0).reshape(
+                    q.shape[0], max_pages * psize, Kh, dh)
+                vg = jnp.take(v_all, pages, axis=0).reshape(
+                    q.shape[0], max_pages * psize, Kh, dh)
+                out = dot_attention(q, kg, vg, causal=True, q_offset=idx,
+                                    kv_len=idx + s)
         elif jnp.ndim(idx) == 1:
             # SLOT-WISE decode (continuous batching): every row is a pool
             # slot at its own length.  The new kv lands at each row's own

@@ -152,12 +152,17 @@ class DenseLM(BaseLM):
 
         if mode == "decode":
             pages = cache.get("pages")
+            # STATIC python flag (never part of the jit pytree): selects the
+            # fused Pallas paged-decode kernel inside the traced body
+            use_kernel = bool(cache.get("use_kernel", False))
 
             def body_d(carry, xs):
                 bp, ck, cv, ci = xs[:4]
                 layer_cache = {"k": ck, "v": cv, "index": ci}
                 if pages is not None:
                     layer_cache["pages"] = xs[4]
+                    if use_kernel:
+                        layer_cache["use_kernel"] = True
                 y, nc = self.block_apply(bp, carry, mesh, positions, "decode",
                                          layer_cache)
                 return y, (nc["k"], nc["v"])

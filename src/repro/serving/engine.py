@@ -40,6 +40,22 @@ out of the same page pool.  Cached and cache-off runs are token-
 identical by construction — the cache only changes *where* prefix KV
 comes from, never its bits.
 
+``kv_kernel`` selects the paged decode attention implementation:
+
+* ``"gather"`` — read K/V back *through* the page table into a
+  materialized ``(slots, max_pages*page_size, K, dh)`` tensor, then
+  attend (the reference path; only option for the contiguous layout).
+* ``"pallas"`` — the fused Pallas paged-attention kernel
+  (``kernels/paged_attention.py``): the page table is walked inside the
+  kernel, K/V stream page-by-page from the pool with online softmax in
+  VMEM scratch, and the materialized gather never hits HBM.
+* ``"auto"`` (default) — follow the tuner (``plan.serve_kv_kernel``:
+  pallas targets get the kernel, reference targets the gather).
+
+Both implementations are token-identical (the equivalence sweep in
+tests/test_kernels_paged.py and the engine-level stream check in
+tests/test_serving_paged.py hold them to it).
+
 ``launch/serve.py`` is a thin CLI over this class; the serving benchmark
 drives both layouts and both policies through engines that share the
 request traces, so every comparison is apples-to-apples.
@@ -71,6 +87,7 @@ from repro.training.steps import (build_decode_step_slots,
 
 SERVABLE_FAMILIES = ("dense", "moe")
 KV_LAYOUTS = ("contiguous", "paged")
+KV_KERNELS = ("auto", "gather", "pallas")
 
 
 class ServeEngine:
@@ -82,9 +99,16 @@ class ServeEngine:
                  eos_id: int | None = None, kv_layout: str = "contiguous",
                  page_size: int = 0, num_pages: int = 0,
                  replicas: int = 1, prefill_chunk: int | None = None,
-                 prefix_cache: bool = False, log=print):
+                 prefix_cache: bool = False, kv_kernel: str = "auto",
+                 log=print):
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(f"kv_layout {kv_layout!r} not in {KV_LAYOUTS}")
+        if kv_kernel not in KV_KERNELS:
+            raise ValueError(f"kv_kernel {kv_kernel!r} not in {KV_KERNELS}")
+        if kv_kernel == "pallas" and kv_layout != "paged":
+            raise ValueError(
+                "kv_kernel='pallas' is the fused *paged* decode kernel — "
+                f"it needs kv_layout='paged', not {kv_layout!r}")
         if replicas < 1:
             raise ValueError(f"replicas {replicas} < 1")
         if prefix_cache and kv_layout != "paged":
@@ -173,9 +197,16 @@ class ServeEngine:
         prefill = build_prefill_step(self.model, self.mesh)
         self._prefill = jax.jit(prefill)
         if kv_layout == "paged":
-            decode = build_decode_step_slots_paged(self.model, self.mesh)
+            # "auto" follows the tuner's call for this target; the plan
+            # field is only "" for non-serve shapes, so default to gather
+            self.kv_kernel = kv_kernel if kv_kernel != "auto" \
+                else (self.plan.serve_kv_kernel or "gather")
+            decode = build_decode_step_slots_paged(
+                self.model, self.mesh,
+                use_kernel=(self.kv_kernel == "pallas"))
             chunk = build_prefill_chunk_step_paged(self.model, self.mesh)
         else:
+            self.kv_kernel = "gather"
             decode = build_decode_step_slots(self.model, self.mesh)
             chunk = build_prefill_chunk_step(self.model, self.mesh)
         self._decode = jax.jit(decode, donate_argnums=(1,))

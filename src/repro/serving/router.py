@@ -220,7 +220,8 @@ class ReplicaRouter:
               max_len: int = 128, seed: int = 0, eos_id: int | None = None,
               policy: str = "least_loaded", page_size: int = 0,
               num_pages: int = 0, prefill_chunk: int | None = None,
-              prefix_cache: bool = False, log=print) -> "ReplicaRouter":
+              prefix_cache: bool = False, kv_kernel: str = "auto",
+              log=print) -> "ReplicaRouter":
         """Build an N-replica fleet, splitting the tuner budget N ways.
 
         ``kv_layout`` may be comma-separated (``"paged,contiguous"``) and
@@ -244,8 +245,11 @@ class ReplicaRouter:
                     max_len=max_len, seed=seed, eos_id=eos_id,
                     kv_layout=lay, page_size=page_size, num_pages=num_pages,
                     replicas=replicas, prefill_chunk=prefill_chunk,
-                    # mixed fleets: the cache only applies to paged slots
-                    prefix_cache=prefix_cache and lay == "paged", log=log)
+                    # mixed fleets: the cache / fused decode kernel only
+                    # apply to paged slots
+                    prefix_cache=prefix_cache and lay == "paged",
+                    kv_kernel=kv_kernel if lay == "paged" else "auto",
+                    log=log)
             fleet.append(built[lay])
         return cls(fleet, policy=policy, log=log)
 

@@ -200,7 +200,7 @@ def build_decode_step_slots(model, mesh=None):
     return decode_step
 
 
-def build_decode_step_slots_paged(model, mesh=None):
+def build_decode_step_slots_paged(model, mesh=None, use_kernel: bool = False):
     """Slot-wise decode over a *paged* KV pool (PagedKVCachePool).
 
     Same contract as ``build_decode_step_slots``, but the cache's K/V are
@@ -212,6 +212,14 @@ def build_decode_step_slots_paged(model, mesh=None):
     its dead write into the reserved junk page 0.  Jittable; the engine
     donates the cache argument only — the page table is tiny and
     re-uploaded per step.
+
+    use_kernel=True swaps the gather-then-attend read for the fused
+    Pallas paged-attention kernel (kernels/paged_attention.py): the page
+    table is walked inside the kernel, so the materialized
+    (slots, max_pages*page_size, K, dh) read never hits HBM.  The flag is
+    STATIC — it is closed over and inserted into the cache dict inside
+    the traced function, never at the jit boundary, so cache pytree
+    structure (and donation) is unchanged.
     """
     def decode_step(params, cache, tokens, active, pages):
         keep = active.astype(bool)
@@ -221,8 +229,10 @@ def build_decode_step_slots_paged(model, mesh=None):
         # read-only page other requests attend, so their rows divert to
         # the reserved junk page 0 — same place zeroed rows already write
         safe_pages = jnp.where(keep[:, None], pages, 0)
-        logits, new_cache = model.decode_step(
-            params, dict(cache, pages=safe_pages), tokens, mesh)
+        dcache = dict(cache, pages=safe_pages)
+        if use_kernel:
+            dcache["use_kernel"] = True
+        logits, new_cache = model.decode_step(params, dcache, tokens, mesh)
         new_index = jnp.where(keep, new_cache["index"], cache["index"])
         return logits, {"k": new_cache["k"], "v": new_cache["v"],
                         "index": new_index}

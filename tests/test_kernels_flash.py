@@ -52,3 +52,41 @@ def test_flash_rejects_bad_blocks(rng):
     q = jnp.zeros((1, 100, 2, 16))
     with pytest.raises(AssertionError):
         flash_attention(q, q[:, :, :1], q[:, :, :1], block_q=64, block_k=64)
+
+
+def test_flash_short_kv_len_regression(rng):
+    """Fully-masked key blocks must not poison the accumulator.
+
+    With kv_len=32 and block_k=64, key block 1 is masked end-to-end; the
+    old kernel computed p = exp(NEG_INF - NEG_INF) = 1 for every masked
+    entry there, corrupting l/acc.  The fix zeroes p under the mask, so
+    the padded cache attends exactly like a 32-long one."""
+    from repro.models.layers import dot_attention
+    k1, k2, k3 = jax.random.split(rng, 3)
+    b, s, t, H, K, dh, kv_len = 1, 128, 128, 4, 2, 64, 32
+    q = jax.random.normal(k1, (b, s, H, dh), jnp.float32)
+    k = jax.random.normal(k2, (b, t, K, dh), jnp.float32)
+    v = jax.random.normal(k3, (b, t, K, dh), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          kv_len=kv_len)
+    want = dot_attention(q, k, v, causal=True, kv_len=kv_len, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # garbage past kv_len must be invisible, not just down-weighted
+    k_dirty = k.at[:, kv_len:].set(1e4)
+    v_dirty = v.at[:, kv_len:].set(1e4)
+    out_dirty = flash_attention(q, k_dirty, v_dirty, causal=True,
+                                block_q=64, block_k=64, kv_len=kv_len)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_dirty))
+
+
+def test_flash_kv_len_zero_yields_finite_zeros(rng):
+    """A row with no valid key at all returns zeros (clamped denominator),
+    never NaN/inf from the 0/0 the poisoning bug would produce."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (1, 64, 2, 32), jnp.float32)
+    k = jax.random.normal(k2, (1, 64, 2, 32), jnp.float32)
+    v = jax.random.normal(k3, (1, 64, 2, 32), jnp.float32)
+    out = np.asarray(flash_attention(q, k, v, causal=False, block_q=64,
+                                     block_k=64, kv_len=0))
+    assert np.all(out == 0.0)

@@ -28,14 +28,15 @@ _ENGINES: dict = {}
 
 
 def engine_for(layout, page_size=0, num_pages=0, slots=SLOTS,
-               max_len=MAX_LEN, target="local:cpu"):
+               max_len=MAX_LEN, target="local:cpu", kv_kernel="auto"):
     """Engines are expensive (jit); share them across tests by config."""
-    key = (layout, page_size, num_pages, slots, max_len, target)
+    key = (layout, page_size, num_pages, slots, max_len, target, kv_kernel)
     if key not in _ENGINES:
         _ENGINES[key] = ServeEngine(
             arch=ARCH, target=target, num_slots=slots, max_len=max_len,
             seed=0, kv_layout=layout, page_size=page_size,
-            num_pages=num_pages, log=lambda *a, **k: None)
+            num_pages=num_pages, kv_kernel=kv_kernel,
+            log=lambda *a, **k: None)
     return _ENGINES[key]
 
 
@@ -286,6 +287,95 @@ def test_top_k_one_is_greedy_and_temperature_changes_tokens():
     g = ec.run(greedy)
     assert _tokens(ec.run(k1)) == _tokens(g)
     assert _tokens(ec.run(hot)) != _tokens(g)
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas paged-attention kernel (kv_kernel="pallas")
+
+
+def test_kernel_on_token_identical_to_gather_engine_level():
+    """Engine-level keystone for the fused kernel: the SAME trace decoded
+    with kv_kernel="pallas" and kv_kernel="gather" yields bit-identical
+    token streams under both schedulers (the kernel reproduces the gather
+    path's bf16 rounding recipe, not just its math)."""
+    ep = engine_for("paged", page_size=16)
+    ek = engine_for("paged", page_size=16, kv_kernel="pallas")
+    assert ep.kv_kernel == "gather"          # auto resolves via the plan
+    assert ek.kv_kernel == "pallas"
+    reqs = zipf_trace(6, ep.cfg.vocab_size, max_prompt=16, max_new=10,
+                      seed=3)
+    a = ep.run(reqs, policy="continuous")
+    b = ek.run(reqs, policy="continuous")
+    assert _tokens(a) == _tokens(b)
+    assert a.decode_steps == b.decode_steps
+    # gang scheduling exercises the all-slots-resident shape too
+    assert _tokens(ep.run(reqs, policy="static")) == \
+        _tokens(ek.run(reqs, policy="static"))
+
+
+def test_kernel_survives_preemption_and_junk_rows():
+    """Scarce pages force mid-decode preemptions: freed slots leave
+    zeroed page-table rows (and junk-page writes) that the kernel must
+    mask in-kernel.  Token streams still match the gather path exactly."""
+    scarce = engine_for("paged", page_size=8, num_pages=13)
+    scarce_k = engine_for("paged", page_size=8, num_pages=13,
+                          kv_kernel="pallas")
+    reqs = zipf_trace(8, scarce.cfg.vocab_size, max_prompt=16, max_new=16,
+                      seed=3)
+    a = scarce.run(reqs, policy="continuous")
+    b = scarce_k.run(reqs, policy="continuous")
+    assert _tokens(a) == _tokens(b)
+    assert b.preemptions == a.preemptions
+
+
+def test_contiguous_engine_rejects_pallas_kv_kernel():
+    with pytest.raises(ValueError, match="kv_kernel"):
+        ServeEngine(arch=ARCH, num_slots=2, max_len=32, seed=0,
+                    kv_layout="contiguous", kv_kernel="pallas",
+                    log=lambda *a, **k: None)
+
+
+# ---------------------------------------------------------------------------
+# Overwrite clamp: a full slot's extra write must land in junk page 0
+
+
+def test_full_slot_extra_write_routes_to_junk_not_shared_page():
+    """Regression for the decode write clamp: a slot already at its
+    page-run capacity (idx // page_size == max_pages) used to WRAP its
+    write into the slot's last page via jnp.clip — and under the
+    shared-prefix cache that page may be refcounted by other live
+    requests.  The ok-guard must divert the overflow to the reserved
+    junk page 0, leaving every real page bitwise untouched."""
+    model = _model()
+    params = init_params(model.param_table(), jax.random.PRNGKey(0))
+    pool = PagedKVCachePool(model, num_slots=2, max_len=32, page_size=8,
+                            num_pages=9)
+    s0 = pool.alloc()
+    pool.insert(s0, _prefill_cache(model, params, 32))  # 4 pages: at cap
+    assert pool._pages_held[s0] == pool.max_pages
+    # simulate a prefix-cache share: slot 1's row references s0's last
+    # page, refcounted — exactly the page the old clamp would overwrite
+    s1 = pool.alloc()
+    last = int(pool.page_table[s0, -1])
+    pool.page_table[s1, 0] = last
+    pool.page_refs[last] += 1
+
+    from repro.training.steps import build_decode_step_slots_paged
+    step = jax.jit(build_decode_step_slots_paged(model))  # non-donating
+    cache = dict(pool.cache)
+    before_k = np.asarray(cache["k"], np.float32).copy()
+    before_v = np.asarray(cache["v"], np.float32).copy()
+    tokens = jnp.ones((2, 1), jnp.int32)
+    active = jnp.asarray([1, 0], jnp.int32)
+    _, new_cache = step(params, cache, tokens, active,
+                        jnp.asarray(pool.page_table))
+    after_k = np.asarray(new_cache["k"], np.float32)
+    after_v = np.asarray(new_cache["v"], np.float32)
+    # every real page — the shared refcounted one included — is bitwise
+    # unchanged; the overflow write landed in the junk page
+    np.testing.assert_array_equal(after_k[:, 1:], before_k[:, 1:])
+    np.testing.assert_array_equal(after_v[:, 1:], before_v[:, 1:])
+    assert np.abs(after_k[:, 0]).sum() > 0    # the write went somewhere
 
 
 # ---------------------------------------------------------------------------
