@@ -30,13 +30,20 @@ traffic lives in):
    cache off vs on.  The cached fleet must prefill strictly fewer
    prompt tokens (hit rate > 0) while emitting bit-identical token
    streams — reuse is free or it is a bug.
-6. **gather vs fused-kernel paged decode** (this PR): the same tight
+6. **gather vs fused-kernel paged decode** (PR 6): the same tight
    paged trace with ``kv_kernel='pallas'`` — the fused Pallas
    paged-attention kernel walking the page table in-kernel instead of
    materializing the (slots, max_pages*page_size, K, dh) gather each
    tick.  Gated to be token-identical to the gather cell; wall time on
    CPU is interpret-mode emulation (the bytes-moved win is quoted by
    ``benchmarks/kernel_bench.py``'s ``kernel_paged_decode_*`` cells).
+7. **spec-off vs draft-then-verify decode** (this PR): a repetitive
+   greedy trace (``repetitive_trace`` over the 4-token-vocab
+   ``picolm-4-smoke``, whose streams settle into n-gram-predictable
+   cycles — the stand-in for template/boilerplate traffic) through the
+   same paged engine with ``spec_k=0`` vs ``spec_k=4``.  Gated on
+   bit-identical token streams AND accepted-tokens/verify-step > 1 —
+   the spec path must buy multi-token ticks or it is dead weight.
 
 The layout x policy grid cells run with ``prefill_chunk=0`` (blocking)
 so their decode-step counts stay comparable across baselines; the
@@ -67,6 +74,9 @@ TIGHT_SLOTS = 3          # contiguous slots the tight target affords
 FLEET = 3                # router replicas in the fleet comparison
 REGRESSION_TOLERANCE = 0.20   # max fractional tok/s drop vs baseline
 ARCH = "deepseek-7b-smoke"
+SPEC_ARCH = "picolm-4-smoke"  # 4-token-vocab probe: n-gram-predictable
+#                               greedy streams, the spec-decode regime
+SPEC_K = 4               # draft tokens per verify step in the spec cells
 
 
 def _kv_token_bytes(cfg) -> int:
@@ -152,10 +162,36 @@ def _sharedprefix(n: int, engine, seed: int = TRACE_SEED):
     return sharedprefix_trace(n, engine.cfg.vocab_size, seed=seed)
 
 
+def _spec_engine(target: str = "local:cpu"):
+    """A paged engine on the 4-token-vocab probe arch — the only extra
+    compile the spec cells pay (picolm shares deepseek-7b-smoke's layer
+    shapes except the tiny vocab head)."""
+    from repro.serving import ServeEngine
+    return ServeEngine(arch=SPEC_ARCH, target=target, num_slots=4,
+                       max_len=MAX_LEN, seed=0, kv_layout="paged",
+                       log=lambda *a, **k: None)
+
+
+def _repetitive(n: int, engine, max_new: int = 48, seed: int = TRACE_SEED):
+    """Short cyclic prompts, long greedy generations — the regime where
+    the n-gram drafter's accepted-tokens/verify-step clears 1."""
+    from repro.serving import repetitive_trace
+    return repetitive_trace(n, engine.cfg.vocab_size, max_new=max_new,
+                            seed=seed)
+
+
 def _num(x, nd: int = 4):
     """Round for the JSON emitter; NaN (e.g. imbalance of an idle fleet)
     becomes None — valid strict JSON instead of a bare NaN literal."""
     return None if x != x else round(x, nd)
+
+
+def _timed(fn, *args, **kwargs):
+    """Run ``fn(*args, **kwargs)`` under the wall clock; returns
+    ``(result, seconds)`` — the one timing idiom every cell shares."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, time.perf_counter() - t0
 
 
 def run(report) -> None:
@@ -165,12 +201,8 @@ def run(report) -> None:
     # compiles its own prefill/insert) so neither timed run pays compile
     engine.run(reqs, policy="continuous")
 
-    t0 = time.perf_counter()
-    static = engine.run(reqs, policy="static")
-    t_static = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    cont = engine.run(reqs, policy="continuous")
-    t_cont = time.perf_counter() - t0
+    static, t_static = _timed(engine.run, reqs, policy="static")
+    cont, t_cont = _timed(engine.run, reqs, policy="continuous")
 
     speedup = cont.tokens_per_s / max(static.tokens_per_s, 1e-9)
     report("serve_static_batching",
@@ -189,12 +221,8 @@ def run(report) -> None:
     ltrace = _trace(N_REQUESTS, e_cont)
     e_cont.run(ltrace, policy="continuous")       # warm
     e_paged.run(ltrace, policy="continuous")
-    t0 = time.perf_counter()
-    s_cont = e_cont.run(ltrace, policy="continuous")
-    t_c = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    s_paged = e_paged.run(ltrace, policy="continuous")
-    t_p = time.perf_counter() - t0
+    s_cont, t_c = _timed(e_cont.run, ltrace, policy="continuous")
+    s_paged, t_p = _timed(e_paged.run, ltrace, policy="continuous")
     report("serve_contiguous_tight_budget",
            t_c / max(s_cont.decode_steps, 1) * 1e6,
            f"{s_cont.tokens_per_s:.1f} tok/s; {e_cont.num_slots} slots; "
@@ -210,9 +238,7 @@ def run(report) -> None:
 
     # --- router over a fleet of tight replicas vs the single engine ------
     router = _router(e_cont)
-    t0 = time.perf_counter()
-    s_fleet = router.run(ltrace, policy="continuous")
-    t_f = time.perf_counter() - t0
+    s_fleet, t_f = _timed(router.run, ltrace, policy="continuous")
     steps = max(max(s.decode_steps for s in s_fleet.replica_stats), 1)
     report("serve_router_least_loaded_fleet",
            t_f / steps * 1e6,
@@ -227,12 +253,9 @@ def run(report) -> None:
     ptrace = _longprompt(N_REQUESTS, e_cont)
     router.run(ptrace, policy="continuous", prefill_chunk=0)      # warm
     router.run(ptrace, policy="continuous")
-    t0 = time.perf_counter()
-    p_block = router.run(ptrace, policy="continuous", prefill_chunk=0)
-    t_b = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    p_chunk = router.run(ptrace, policy="continuous")
-    t_c2 = time.perf_counter() - t0
+    p_block, t_b = _timed(router.run, ptrace, policy="continuous",
+                          prefill_chunk=0)
+    p_chunk, t_c2 = _timed(router.run, ptrace, policy="continuous")
     report("serve_longprompt_router_blocking", t_b * 1e6,
            f"mean TTFT {p_block.mean_ttft_steps:.1f} vsteps; "
            f"{p_block.tokens_per_s:.1f} tok/s fleet")
@@ -248,12 +271,8 @@ def run(report) -> None:
     strace = _sharedprefix(N_REQUESTS, e_paged)
     sp_router.run(strace)                                         # warm
     sp_router.run(strace, prefix_cache=True)
-    t0 = time.perf_counter()
-    sp_cold = sp_router.run(strace)
-    t_sc = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    sp_hot = sp_router.run(strace, prefix_cache=True)
-    t_sh = time.perf_counter() - t0
+    sp_cold, t_sc = _timed(sp_router.run, strace)
+    sp_hot, t_sh = _timed(sp_router.run, strace, prefix_cache=True)
     report("serve_sharedprefix_router_cold", t_sc * 1e6,
            f"{sp_cold.prefill_tokens} prompt tokens prefilled; "
            f"mean TTFT {sp_cold.mean_ttft_steps:.1f} vsteps; "
@@ -264,6 +283,24 @@ def run(report) -> None:
            f"{sp_hot.prefix_hit_rate:.0%}); mean TTFT "
            f"{sp_hot.mean_ttft_steps:.1f} vsteps; "
            f"{sp_hot.tokens_per_s:.1f} tok/s fleet")
+
+    # --- spec-off vs draft-then-verify on the repetitive trace -----------
+    e_spec = _spec_engine()
+    rtrace = _repetitive(N_REQUESTS, e_spec)
+    e_spec.run(rtrace, spec_k=0, prefill_chunk=0)               # warm
+    e_spec.run(rtrace, spec_k=SPEC_K, prefill_chunk=0)
+    spc_off, t_o = _timed(e_spec.run, rtrace, spec_k=0, prefill_chunk=0)
+    spc_on, t_v = _timed(e_spec.run, rtrace, spec_k=SPEC_K,
+                         prefill_chunk=0)
+    report("serve_repetitive_spec_off",
+           t_o / max(spc_off.decode_steps, 1) * 1e6,
+           f"{spc_off.tokens_per_s:.1f} tok/s; "
+           f"{spc_off.decode_steps} steps")
+    report("serve_repetitive_spec_on",
+           t_v / max(spc_on.decode_steps, 1) * 1e6,
+           f"{spc_on.tokens_per_s:.1f} tok/s; {spc_on.decode_steps} steps "
+           f"({spc_off.decode_steps / max(spc_on.decode_steps, 1):.2f}x "
+           f"fewer); {spc_on.accepted_per_verify:.2f} tokens/verify")
 
 
 def run_smoke(out_path: str = "BENCH_serving.json",
@@ -340,6 +377,32 @@ def run_smoke(out_path: str = "BENCH_serving.json",
         "preemptions": kstats.preemptions,
         "mean_ttft_steps": round(kstats.mean_ttft_steps, 4),
     }
+    # draft-then-verify speculative decoding: the repetitive greedy trace
+    # on the 4-token-vocab probe arch, same paged engine with spec off vs
+    # spec_k=SPEC_K — gated below on bit-identical streams AND
+    # accepted-tokens/verify-step > 1 (the multi-token-tick win shows up
+    # in tokens_per_step, which the regression gate then guards)
+    e_spec = _spec_engine()
+    rtrace = _repetitive(n_requests, e_spec)
+    e_spec.run(rtrace, spec_k=0, prefill_chunk=0)           # warm both
+    e_spec.run(rtrace, spec_k=SPEC_K, prefill_chunk=0)      # step shapes
+    spc_off = e_spec.run(rtrace, spec_k=0, prefill_chunk=0)
+    spc_on = e_spec.run(rtrace, spec_k=SPEC_K, prefill_chunk=0)
+    for name, k, stats in (("paged_spec_off", 0, spc_off),
+                           ("paged_spec_on", SPEC_K, spc_on)):
+        cells[name] = {
+            "tokens_per_s": round(stats.tokens_per_s, 2),
+            "tokens_per_step": round(
+                stats.generated_tokens / max(stats.decode_steps, 1), 4),
+            "arch": SPEC_ARCH,
+            "spec_k": k,
+            "decode_steps": stats.decode_steps,
+            "generated_tokens": stats.generated_tokens,
+            "spec_verify_steps": stats.spec_verify_steps,
+            "spec_drafted_tokens": stats.spec_drafted_tokens,
+            "spec_accepted_tokens": stats.spec_accepted_tokens,
+            "accepted_per_verify": round(stats.accepted_per_verify, 4),
+        }
     # router fleet: FLEET tight contiguous replicas, least-loaded routing,
     # same trace — fleet tok/s, aggregate in-flight, and load imbalance
     # no extra warm pass: the fleet reuses single_cont's already-warmed
@@ -426,6 +489,8 @@ def run_smoke(out_path: str = "BENCH_serving.json",
            "max_len": MAX_LEN, "trace_seed": TRACE_SEED, "cells": cells}
     pc = cells["paged_continuous"]
     pk = cells["paged_continuous_kernel"]
+    so = cells["paged_spec_off"]
+    sn = cells["paged_spec_on"]
     rc = cells[f"router_least_loaded_x{FLEET}"]
     lb = cells["longprompt_router_blocking"]
     lc = cells["longprompt_router_chunked"]
@@ -445,7 +510,10 @@ def run_smoke(out_path: str = "BENCH_serving.json",
           f"({lc['overlap_steps']} overlapped ticks) | sharedprefix "
           f"prefill {sh['prefill_tokens']} vs {sc['prefill_tokens']} cold "
           f"({sh['prefill_tokens_saved']} saved, hit rate "
-          f"{sh['prefix_hit_rate']})")
+          f"{sh['prefix_hit_rate']}) | spec k={SPEC_K} "
+          f"{sn['accepted_per_verify']} tok/verify, "
+          f"{sn['decode_steps']} steps vs {so['decode_steps']} spec-off "
+          f"(token-identical)")
     # gates run BEFORE the write: a failing run must not replace the
     # checked-in baseline with its own (regressed) numbers
     try:
@@ -474,6 +542,17 @@ def run_smoke(out_path: str = "BENCH_serving.json",
                 "SMOKE FAIL: prefix-cached token streams differ from the "
                 "cache-off run on the shared-prefix trace — reuse must "
                 "never change output")
+        if sp_tok(spc_on) != sp_tok(spc_off):
+            raise SystemExit(
+                "SMOKE FAIL: speculative token streams differ from the "
+                "spec-off run on the repetitive trace — draft-then-verify "
+                "must be bit-identical to sequential decode")
+        if not sn["accepted_per_verify"] > 1.0:
+            raise SystemExit(
+                f"SMOKE FAIL: accepted-tokens/verify-step "
+                f"{sn['accepted_per_verify']} <= 1 on the repetitive "
+                f"trace — the drafter is accepting nothing and every "
+                f"verify is a wasted wide step")
         if not sh["prefill_tokens_saved"] > 0:
             raise SystemExit(
                 "SMOKE FAIL: prefix cache saved no prefill tokens on the "

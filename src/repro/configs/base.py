@@ -76,6 +76,9 @@ class ShapeConfig:
     global_batch: int
     kind: str                        # train | prefill | decode
     serve_replicas: int = 1          # serve: engines sharing the HBM budget
+    serve_repetitiveness: float = 0.0  # serve: trace n-gram self-overlap in
+    #                                    [0, 1] — the tuner's signal for
+    #                                    picking plan.serve_spec_k
 
 
 SHAPES: dict[str, ShapeConfig] = {

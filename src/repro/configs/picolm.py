@@ -1,0 +1,36 @@
+"""picolm-4 — a 4-token-vocabulary probe model for speculative decoding.
+
+Registered smoke-only (it IS its own smoke config): with a random-init
+checkpoint, a full-size vocabulary produces chaotic greedy streams that
+no history drafter can predict, but collapsing the vocabulary to 4
+tokens makes the greedy continuation settle into short n-gram-
+predictable cycles — a deterministic, dependency-free stand-in for
+repetitive real text (template fill-in, boilerplate, list continuation).
+The serving benchmark's ``paged_spec_{off,on}`` cells decode this arch
+over ``repetitive_trace`` to gate accepted-tokens/verify-step > 1 with
+bit-identical streams; everything else about the model matches the
+``deepseek-7b-smoke`` serving smoke (2 dense layers, d_model 64, GQA
+4/4) so the same pools, steps, and kernels exercise unchanged.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+SMOKE = ModelConfig(
+    name="picolm-4-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=4,
+    activation="silu",
+    norm="rmsnorm",
+    pos="rope",
+    notes="4-token-vocab speculative-decoding probe (smoke-only)",
+)
+
+# registering the smoke under both roles keeps it out of the full-arch
+# dry-run sweeps (is_smoke) while staying addressable as an arch
+register(SMOKE, SMOKE, skip_shapes=("train_4k", "prefill_32k",
+                                    "decode_32k", "long_500k"))

@@ -39,6 +39,8 @@ class DeploymentPlan:
     #                                       shared-prefix cache (same pool)
     serve_kv_kernel: str = ""             # paged decode attn: gather | pallas
     #                                       ("" = n/a / contiguous layout)
+    serve_spec_k: int = 0                 # speculative draft tokens per slot
+    #                                       per verify step (0 = spec off)
     sharding_fallbacks: list = dataclasses.field(default_factory=list)
     napkin: dict = dataclasses.field(default_factory=dict)
     notes: list = dataclasses.field(default_factory=list)
@@ -87,6 +89,9 @@ class DeploymentPlan:
         if self.serve_kv_kernel:
             lines.append(f"  serve kv kernel : {self.serve_kv_kernel} "
                          f"(paged decode attention)")
+        if self.serve_spec_k:
+            lines.append(f"  serve spec k    : {self.serve_spec_k} draft "
+                         f"tokens per verify step (draft-then-verify)")
         if self.napkin:
             lines.append("  napkin math:")
             for k, v in self.napkin.items():

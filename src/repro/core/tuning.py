@@ -29,6 +29,30 @@ from repro.core.target import TargetSpec
 # quote in the napkin is per *expected* tokens, not per worst case)
 SERVE_PAGE_SIZE = 16
 SERVE_EXPECTED_LEN_FRACTION = 0.25
+# speculative decoding: below this trace repetitiveness the n-gram
+# drafter's expected accepted-tokens/verify (~1/(1-r)) does not cover the
+# verify step's (k+1)-wide compute, so the tuner keeps spec off
+SPEC_MIN_REPETITIVENESS = 0.35
+SPEC_MAX_K = 8
+
+
+def spec_k_for(repetitiveness: float) -> int:
+    """Draft length the tuner picks for a trace's repetitiveness r.
+
+    r proxies the per-draft accept probability, so a k-draft verify step
+    emits E(k) = (1 - r^{k+1})/(1 - r) tokens in expectation.  E(k) is
+    increasing but saturating in k; each extra draft costs verify compute
+    whether or not it is accepted, so k stops where the marginal token
+    gain r^k drops below ~0.1 (diminishing returns), capped at
+    SPEC_MAX_K.  r below SPEC_MIN_REPETITIVENESS turns spec off (0).
+    """
+    r = min(max(float(repetitiveness), 0.0), 0.99)
+    if r < SPEC_MIN_REPETITIVENESS:
+        return 0
+    k = 1
+    while k < SPEC_MAX_K and r ** (k + 1) >= 0.1:
+        k += 1
+    return k
 
 
 def param_count_estimate(cfg: ModelConfig) -> int:
@@ -307,6 +331,32 @@ def tune(cfg: ModelConfig, shape: ShapeConfig, target: TargetSpec,
                 f"(worst-case page runs); fused pallas streams only held "
                 f"pages (~{fused_bytes_est/1e9:.3f} GB/chip at expected "
                 f"lengths)")
+            # --- speculative decoding (draft-then-verify) ------------------
+            # The trace's repetitiveness r (n-gram self-overlap in [0, 1],
+            # measured by serving/trace.trace_repetitiveness and passed in
+            # as a shape hint) doubles as the napkin's per-draft accept
+            # probability: a k-draft verify step then emits
+            # E(k) = 1 + r + r^2 + ... + r^k = (1 - r^{k+1}) / (1 - r)
+            # tokens in expectation for ONE jitted call.  Verify compute
+            # grows ~(k+1)x but decode is bandwidth-bound on the weights,
+            # so E(k) > 1 is (napkin-)free throughput; below the
+            # break-even repetitiveness the drafts just miss and the plan
+            # keeps spec off.
+            rep = float(getattr(shape, "serve_repetitiveness", 0.0) or 0.0)
+            plan.serve_spec_k = spec_k_for(rep)
+            if plan.serve_spec_k:
+                k = plan.serve_spec_k
+                est = (1.0 - rep ** (k + 1)) / (1.0 - rep)
+                plan.napkin["serve_spec"] = (
+                    f"spec_k={k} at repetitiveness {rep:.2f}: expected "
+                    f"~{est:.2f} accepted tokens/verify step "
+                    f"(1 guaranteed + drafts while they match)")
+            elif rep:
+                plan.napkin["serve_spec"] = (
+                    f"spec off: repetitiveness {rep:.2f} < "
+                    f"{SPEC_MIN_REPETITIVENESS} — expected accepted "
+                    f"tokens/verify ~{1.0 / (1.0 - min(rep, 0.99)):.2f} "
+                    f"does not cover the verify overhead")
             # fleet capacity: what N replicas hold together, in tokens —
             # the quantity a router's least-loaded policy balances
             fleet_tokens = replicas * usable_tokens

@@ -21,20 +21,22 @@ import numpy as np
 from repro.configs.base import get_config
 
 # synthetic request mixes the engine/router paths can serve
-TRACES = ("uniform", "zipf", "longprompt", "sharedprefix")
+TRACES = ("uniform", "zipf", "longprompt", "sharedprefix", "repetitive")
 
 
 def _make_trace(name: str, n: int, vocab: int, prefill_len: int,
                 decode_tokens: int, seed: int, temperature: float,
-                top_k: int, page_size: int = 0):
-    from repro.serving import (longprompt_trace, sharedprefix_trace,
-                               uniform_trace, zipf_trace)
+                top_k: int, top_p: float = 1.0, page_size: int = 0):
+    from repro.serving import (longprompt_trace, repetitive_trace,
+                               sharedprefix_trace, uniform_trace, zipf_trace)
     kw = dict(max_new=decode_tokens, seed=seed, temperature=temperature,
-              top_k=top_k)
+              top_k=top_k, top_p=top_p)
     if name == "zipf":
         return zipf_trace(n, vocab, max_prompt=prefill_len, **kw)
     if name == "longprompt":
         return longprompt_trace(n, vocab, max_prompt=prefill_len, **kw)
+    if name == "repetitive":
+        return repetitive_trace(n, vocab, prompt_len=prefill_len, **kw)
     if name == "sharedprefix":
         # head = half the prompt budget, aligned to the pool's REAL page
         # size so the prefix cache has whole pages to reuse (a head
@@ -52,16 +54,40 @@ def _make_trace(name: str, n: int, vocab: int, prefill_len: int,
     return uniform_trace(n, vocab, prompt_len=prefill_len, **kw)
 
 
+def _auto_repetitiveness(spec_k, trace, n, vocab, prefill_len,
+                         decode_tokens, seed, temperature, top_k, top_p,
+                         page_size) -> float:
+    """The tuner hint behind ``--spec-k auto`` (``spec_k=None``).
+
+    Measures ``trace_repetitiveness`` on a PREVIEW build of the trace —
+    the real trace for the single-engine path (``_make_trace`` is
+    deterministic, so the preview and the served trace agree token for
+    token).  The one wart: the preview cannot see a tuner-sized pool yet,
+    so ``sharedprefix`` head alignment falls back to ``page_size or 16``
+    — the tuner's own default page size, so the figures only diverge
+    under an explicit nonstandard ``--page-size`` (and repetitiveness is
+    a *hint*, not a correctness input: any value yields bit-identical
+    streams)."""
+    if spec_k is not None:      # explicit k (or 0/off): no hint needed
+        return 0.0
+    from repro.serving import trace_repetitiveness
+    preview = _make_trace(trace, n, vocab, prefill_len, decode_tokens,
+                          seed, temperature, top_k, top_p,
+                          page_size=page_size or 16)
+    return trace_repetitiveness(preview)
+
+
 def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
                prefill_len: int = 64, decode_tokens: int = 16,
                target: str = "local:cpu", seed: int = 0,
                mode: str = "continuous", requests: int = 0,
                max_len: int = 0, kv_layout: str = "contiguous",
                page_size: int = 0, temperature: float = 0.0,
-               top_k: int = 0, replicas: int = 1,
+               top_k: int = 0, top_p: float = 1.0, replicas: int = 1,
                route_policy: str = "least_loaded",
                prefill_chunk: int | None = None,
                prefix_cache: bool = False, kv_kernel: str = "auto",
+               spec_k: int | None = 0,
                trace: str = "uniform", log=print) -> dict:
     """Serve `requests` requests (default: one per slot) of `prefill_len`
     prompts, `decode_tokens` generations each.  Reports per-request latency
@@ -76,7 +102,11 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
     ``trace='sharedprefix'`` (Zipf-clustered prompt heads) to see hits —
     the default uniform trace draws unrelated prompts.  ``kv_kernel``
     picks the paged decode attention implementation (auto | gather |
-    pallas — see ``--kv-kernel`` help)."""
+    pallas — see ``--kv-kernel`` help).  ``spec_k`` turns on draft-then-
+    verify speculative decoding (k draft tokens per slot per verify step;
+    0 = off; None = let the tuner pick from the trace's measured
+    repetitiveness — pair with ``trace='repetitive'``); token streams
+    are bit-identical with spec on or off."""
     cfg = get_config(arch)
     if trace not in TRACES:
         raise ValueError(f"trace {trace!r} not in {tuple(TRACES)}")
@@ -92,24 +122,31 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
 
     from repro.serving import ServeEngine
     pool_len = max_len or (prefill_len + decode_tokens)
+    repetitiveness = _auto_repetitiveness(
+        spec_k, trace, requests or batch * replicas, cfg.vocab_size,
+        prefill_len, decode_tokens, seed, temperature, top_k, top_p,
+        page_size)
     if replicas > 1:
         return _router_serve_main(
             arch=arch, batch=batch, prefill_len=prefill_len,
             decode_tokens=decode_tokens, target=target, seed=seed,
             mode=mode, requests=requests, pool_len=pool_len,
             kv_layout=kv_layout, page_size=page_size,
-            temperature=temperature, top_k=top_k, replicas=replicas,
+            temperature=temperature, top_k=top_k, top_p=top_p,
+            replicas=replicas,
             route_policy=route_policy, prefill_chunk=prefill_chunk,
-            prefix_cache=prefix_cache, kv_kernel=kv_kernel, trace=trace,
+            prefix_cache=prefix_cache, kv_kernel=kv_kernel,
+            spec_k=spec_k, repetitiveness=repetitiveness, trace=trace,
             log=log)
     engine = ServeEngine(arch=arch, target=target, num_slots=batch,
                          max_len=pool_len, seed=seed, kv_layout=kv_layout,
                          page_size=page_size, prefill_chunk=prefill_chunk,
                          prefix_cache=prefix_cache, kv_kernel=kv_kernel,
+                         spec_k=spec_k, repetitiveness=repetitiveness,
                          log=log)
     n = requests or engine.num_slots
     reqs = _make_trace(trace, n, cfg.vocab_size, prefill_len,
-                       decode_tokens, seed, temperature, top_k,
+                       decode_tokens, seed, temperature, top_k, top_p,
                        page_size=engine.page_size)
     stats = engine.run(reqs, policy=mode)
     for r in stats.results:
@@ -133,6 +170,12 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
         "prefix_hits": stats.prefix_hits,
         "prefix_misses": stats.prefix_misses,
         "prefill_tokens_saved": stats.prefill_tokens_saved,
+        "spec_k": engine.spec_k,
+        "spec_verify_steps": stats.spec_verify_steps,
+        "spec_drafted_tokens": stats.spec_drafted_tokens,
+        "spec_accepted_tokens": stats.spec_accepted_tokens,
+        "accepted_per_verify": stats.accepted_per_verify,
+        "effective_top_k": stats.effective_top_k,
         "decode_s": stats.wall_s,
         "decode_tok_per_s": stats.tokens_per_s,
         "latency_mean_s": float(np.mean([r.latency_s for r in stats.results])),
@@ -147,9 +190,10 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
 
 def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
                        seed, mode, requests, pool_len, kv_layout, page_size,
-                       temperature, top_k, replicas, route_policy,
+                       temperature, top_k, top_p, replicas, route_policy,
                        prefill_chunk=None, prefix_cache=False,
-                       kv_kernel="auto", trace="uniform", log=print) -> dict:
+                       kv_kernel="auto", spec_k=0, repetitiveness=0.0,
+                       trace="uniform", log=print) -> dict:
     """Multi-replica path: ReplicaRouter over N tuner-split engines."""
     from repro.serving import ReplicaRouter
     cfg = get_config(arch)
@@ -157,10 +201,11 @@ def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
         arch=arch, target=target, replicas=replicas, kv_layout=kv_layout,
         num_slots=batch, max_len=pool_len, seed=seed, policy=route_policy,
         page_size=page_size, prefill_chunk=prefill_chunk,
-        prefix_cache=prefix_cache, kv_kernel=kv_kernel, log=log)
+        prefix_cache=prefix_cache, kv_kernel=kv_kernel,
+        spec_k=spec_k, repetitiveness=repetitiveness, log=log)
     n = requests or batch * replicas
     reqs = _make_trace(trace, n, cfg.vocab_size, prefill_len,
-                       decode_tokens, seed, temperature, top_k,
+                       decode_tokens, seed, temperature, top_k, top_p,
                        page_size=max(e.page_size for e in router.engines))
     stats = router.run(reqs, policy=mode)
     for r in stats.results:
@@ -182,6 +227,12 @@ def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
         "prefix_hits": stats.prefix_hits,
         "prefix_misses": stats.prefix_misses,
         "prefill_tokens_saved": stats.prefill_tokens_saved,
+        "spec_k": router.engines[0].spec_k,
+        "spec_verify_steps": stats.spec_verify_steps,
+        "spec_drafted_tokens": stats.spec_drafted_tokens,
+        "spec_accepted_tokens": stats.spec_accepted_tokens,
+        "accepted_per_verify": stats.accepted_per_verify,
+        "effective_top_k": stats.effective_top_k,
         "decode_s": stats.wall_s,
         "decode_tok_per_s": stats.tokens_per_s,
         "latency_mean_s": float(np.mean([r.latency_s
@@ -314,7 +365,19 @@ def main(argv=None):
                         "unrelated prompts), zipf (heavy-tailed), "
                         "longprompt (prefill-stall regime), sharedprefix "
                         "(Zipf-clustered shared prompt heads — the mix "
-                        "--prefix-cache hits on)")
+                        "--prefix-cache hits on), repetitive (short "
+                        "cyclic prompts, long greedy generations — the "
+                        "mix --spec-k pays off on)")
+    p.add_argument("--spec-k", default="0",
+                   help="speculative decoding: draft tokens per slot per "
+                        "verify step (draft-then-verify; 0 = off, 'auto' "
+                        "= let the tuner pick from the trace's measured "
+                        "n-gram repetitiveness).  Drafts come from a "
+                        "deterministic n-gram scan of each request's own "
+                        "history; one jitted verify step scores all k+1 "
+                        "positions and the longest accepted prefix lands "
+                        "in one burst — token streams are bit-identical "
+                        "to --spec-k 0")
     p.add_argument("--prefix-cache", action="store_true",
                    help="reuse shared-prefix KV across requests (paged "
                         "layout only): a per-replica cache maps page-"
@@ -331,17 +394,21 @@ def main(argv=None):
                    help="sampling temperature (0 = greedy)")
     p.add_argument("--top-k", type=int, default=0,
                    help="top-k sampling filter (0 = off)")
+    p.add_argument("--top-p", type=float, default=1.0,
+                   help="nucleus sampling: keep the smallest probability "
+                        "mass >= p after top-k (1.0 = off)")
     a = p.parse_args(argv)
+    spec_k = None if a.spec_k == "auto" else int(a.spec_k)
     serve_main(arch=a.arch, batch=a.batch, prefill_len=a.prefill,
                decode_tokens=a.decode, mode=a.mode, requests=a.requests,
                max_len=a.max_len, kv_layout=a.kv_layout,
                page_size=a.page_size, temperature=a.temperature,
-               top_k=a.top_k, replicas=a.replicas,
+               top_k=a.top_k, top_p=a.top_p, replicas=a.replicas,
                route_policy=a.route_policy,
                prefill_chunk=None if a.prefill_chunk < 0
                else a.prefill_chunk,
                prefix_cache=a.prefix_cache, kv_kernel=a.kv_kernel,
-               trace=a.trace)
+               spec_k=spec_k, trace=a.trace)
 
 
 if __name__ == "__main__":

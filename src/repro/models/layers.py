@@ -273,29 +273,47 @@ def attention(p: dict, x: jax.Array, cfg, mesh, *, positions: jax.Array,
             # tokens.  Rows with a zeroed page-table entry (freed /
             # never-allocated slots) write into the reserved junk page 0,
             # which no live table references.
-            assert s == 1, "slot-wise decode is single-token"
             pages = cache["pages"]
             n_pages, psize = cache["k"].shape[0], cache["k"].shape[1]
             max_pages = pages.shape[1]
             Kh, dh = k.shape[2], k.shape[3]
-            logical_page = idx // psize
-            ok = logical_page < max_pages
-            dest = jnp.take_along_axis(
-                pages, jnp.minimum(logical_page, max_pages - 1)[:, None],
-                axis=1)[:, 0]                                   # (slots,)
-            # out-of-range writes (a slot already at its page-run capacity)
-            # route to the reserved junk page 0 — NOT wrapped into the
-            # slot's last page, which under the prefix cache may be shared
-            # with a live request (same ok-guard as the chunk path below)
-            fpos = jnp.where(ok, dest * psize + idx % psize, idx % psize)
-            k_all = cache["k"].reshape(n_pages * psize, Kh, dh).at[fpos] \
-                .set(k[:, 0]).reshape(n_pages, psize, Kh, dh)
-            v_all = cache["v"].reshape(n_pages * psize, Kh, dh).at[fpos] \
-                .set(v[:, 0]).reshape(n_pages, psize, Kh, dh)
-            if cache.get("use_kernel"):
-                # fused Pallas path: the page table is walked inside the
-                # kernel, so the materialized (slots, max_pages*psize, K,
-                # dh) gather below never hits HBM
+            if s == 1:
+                logical_page = idx // psize
+                ok = logical_page < max_pages
+                dest = jnp.take_along_axis(
+                    pages, jnp.minimum(logical_page, max_pages - 1)[:, None],
+                    axis=1)[:, 0]                               # (slots,)
+                # out-of-range writes (a slot already at its page-run
+                # capacity) route to the reserved junk page 0 — NOT wrapped
+                # into the slot's last page, which under the prefix cache
+                # may be shared with a live request (same ok-guard as the
+                # chunk path below)
+                fpos = jnp.where(ok, dest * psize + idx % psize, idx % psize)
+                k_all = cache["k"].reshape(n_pages * psize, Kh, dh).at[fpos] \
+                    .set(k[:, 0]).reshape(n_pages, psize, Kh, dh)
+                v_all = cache["v"].reshape(n_pages * psize, Kh, dh).at[fpos] \
+                    .set(v[:, 0]).reshape(n_pages, psize, Kh, dh)
+            else:
+                # VERIFY burst: each row writes s speculative positions
+                # idx..idx+s-1.  Per-position page lookup keeps the same
+                # junk-page-0 ok-guard, so a burst past a slot's page-run
+                # capacity can never scribble into a (possibly
+                # prefix-shared) live page.
+                pos = idx[:, None] + jnp.arange(s)[None, :]     # (slots, s)
+                logical_page = pos // psize
+                ok = logical_page < max_pages
+                dest = jnp.take_along_axis(
+                    pages, jnp.minimum(logical_page, max_pages - 1), axis=1)
+                fpos = jnp.where(ok, dest * psize + pos % psize, pos % psize)
+                k_all = cache["k"].reshape(n_pages * psize, Kh, dh).at[fpos] \
+                    .set(k).reshape(n_pages, psize, Kh, dh)
+                v_all = cache["v"].reshape(n_pages * psize, Kh, dh).at[fpos] \
+                    .set(v).reshape(n_pages, psize, Kh, dh)
+            if cache.get("use_kernel") and s == 1:
+                # fused Pallas path (single-token decode only; verify
+                # bursts take the gather path): the page table is walked
+                # inside the kernel, so the materialized
+                # (slots, max_pages*psize, K, dh) gather never hits HBM
                 from repro.kernels.ops import paged_attention
                 out = paged_attention(q[:, 0], k_all, v_all, pages,
                                       (idx + s).astype(jnp.int32))[:, None]
@@ -312,10 +330,19 @@ def attention(p: dict, x: jax.Array, cfg, mesh, *, positions: jax.Array,
             # position (one-hot select — a per-row scatter that XLA fuses),
             # and the mask is per-row causal-with-length.  Window is not
             # applied: pool slots are already bounded by max_len.
-            assert s == 1, "slot-wise decode is single-token"
-            hit = (jnp.arange(t)[None, :] == idx[:, None])[..., None, None]
-            k_all = jnp.where(hit, k, cache["k"])
-            v_all = jnp.where(hit, v, cache["v"])
+            if s == 1:
+                hit = (jnp.arange(t)[None, :] == idx[:, None])[..., None, None]
+                k_all = jnp.where(hit, k, cache["k"])
+                v_all = jnp.where(hit, v, cache["v"])
+            else:
+                # VERIFY burst: scatter s speculative positions per row;
+                # positions past max_len drop (the host caps acceptance at
+                # the slot's backed capacity, so dropped writes are never
+                # attended)
+                rows = jnp.arange(q.shape[0])[:, None]          # (slots, 1)
+                pos = idx[:, None] + jnp.arange(s)[None, :]     # (slots, s)
+                k_all = cache["k"].at[rows, pos].set(k, mode="drop")
+                v_all = cache["v"].at[rows, pos].set(v, mode="drop")
             out = dot_attention(q, k_all, v_all, causal=True, q_offset=idx,
                                 kv_len=idx + s)
         elif window is not None and t <= window:

@@ -4,9 +4,10 @@ Layered as: KV pool (contiguous ``KVCachePool`` or page-table
 ``PagedKVCachePool`` memory layouts, with refcounted pages) +
 ``PrefixCache`` (shared-prefix KV page-run reuse over a paged pool) +
 ``Scheduler`` (admission, in-flight batching, page-pressure preemption,
-per-request sampling) + ``ServeEngine`` facade (tuner-sized pools,
-jitted steps, ``kv_layout`` selection) + ``ReplicaRouter`` (N engines
-behind one admission queue with pluggable routing policies and overflow
+per-request sampling, draft-then-verify speculative decoding) +
+``ServeEngine`` facade (tuner-sized pools, jitted steps, ``kv_layout``
+selection, ``spec_k``) + ``ReplicaRouter`` (N engines behind one
+admission queue with pluggable routing policies and overflow
 re-routing).
 """
 
@@ -16,10 +17,12 @@ from repro.serving.prefill import PrefillManager
 from repro.serving.prefix_cache import PrefixCache, prefix_key
 from repro.serving.router import (ROUTE_POLICIES, ReplicaRouter, RouterStats,
                                   prefix_replica)
-from repro.serving.sampling import make_sampler
+from repro.serving.sampling import K_CAP, effective_top_k, make_sampler
 from repro.serving.scheduler import (Request, RequestResult, Scheduler,
                                      ServeStats, VirtualClock)
-from repro.serving.trace import (longprompt_trace, sharedprefix_trace,
+from repro.serving.spec import Drafter, NGramDrafter
+from repro.serving.trace import (longprompt_trace, repetitive_trace,
+                                 sharedprefix_trace, trace_repetitiveness,
                                  uniform_trace, zipf_trace)
 
 __all__ = ["ServeEngine", "SERVABLE_FAMILIES", "KV_LAYOUTS", "KVCachePool",
@@ -27,5 +30,6 @@ __all__ = ["ServeEngine", "SERVABLE_FAMILIES", "KV_LAYOUTS", "KVCachePool",
            "PrefixCache", "prefix_key", "ReplicaRouter", "RouterStats",
            "ROUTE_POLICIES", "prefix_replica", "Request", "RequestResult",
            "Scheduler", "ServeStats", "VirtualClock", "make_sampler",
-           "longprompt_trace", "sharedprefix_trace", "uniform_trace",
-           "zipf_trace"]
+           "K_CAP", "effective_top_k", "Drafter", "NGramDrafter",
+           "longprompt_trace", "repetitive_trace", "sharedprefix_trace",
+           "trace_repetitiveness", "uniform_trace", "zipf_trace"]

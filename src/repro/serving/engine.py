@@ -64,6 +64,25 @@ request traces, so every comparison is apples-to-apples.
 behind a ``ReplicaRouter``: the tuner splits the HBM budget N ways and
 every pool size above becomes a per-replica figure (the plan's napkin
 additionally quotes the fleet-aggregate ``serve_fleet_capacity``).
+
+``spec_k`` turns on draft-then-verify speculative decoding: every decode
+tick drafts k tokens per slot (``serving/spec.NGramDrafter`` by default —
+longest-suffix n-gram over the slot's own prompt + generated history; any
+object with ``draft(history, k)`` plugs in via ``drafter=``, the hook a
+small ``configs/`` drafter model drops into), scores all k+1 positions in
+ONE jitted verify step, and accepts the longest draft prefix matching the
+sequential sampler's own ``(rid, step)`` draws — so speculative token
+streams are **bit-identical** to ``spec_k=0`` while a tick can emit up to
+k+1 tokens per slot.  Accepted bursts are charged against pages with the
+junk-page-0 overwrite guard, so a burst can never scribble into a
+prefix-shared page.  ``spec_k=None`` defers to the tuner
+(``plan.serve_spec_k``, picked from the trace's repetitiveness — see
+``repetitiveness=``); 0 disables.  Typical usage::
+
+    eng = ServeEngine(arch="picolm-4-smoke", kv_layout="paged", spec_k=4)
+    stats = eng.run(repetitive_trace(32, eng.cfg.vocab_size))
+    stats.accepted_per_verify     # tokens emitted per verify step (> 1
+    stats.spec_accepted_tokens    #  when drafts are being accepted)
 """
 
 from __future__ import annotations
@@ -83,7 +102,9 @@ from repro.training.steps import (build_decode_step_slots,
                                   build_decode_step_slots_paged,
                                   build_prefill_chunk_step,
                                   build_prefill_chunk_step_paged,
-                                  build_prefill_step)
+                                  build_prefill_step,
+                                  build_verify_step_slots,
+                                  build_verify_step_slots_paged)
 
 SERVABLE_FAMILIES = ("dense", "moe")
 KV_LAYOUTS = ("contiguous", "paged")
@@ -100,7 +121,8 @@ class ServeEngine:
                  page_size: int = 0, num_pages: int = 0,
                  replicas: int = 1, prefill_chunk: int | None = None,
                  prefix_cache: bool = False, kv_kernel: str = "auto",
-                 log=print):
+                 spec_k: int | None = 0, drafter=None,
+                 repetitiveness: float = 0.0, log=print):
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(f"kv_layout {kv_layout!r} not in {KV_LAYOUTS}")
         if kv_kernel not in KV_KERNELS:
@@ -118,10 +140,15 @@ class ServeEngine:
         # `replicas` tells the tuner how many co-resident engines split the
         # HBM budget (ReplicaRouter fleets); num_slots stays the *per
         # replica* ask, so the fleet-wide batch is num_slots x replicas
+        if spec_k is not None and spec_k < 0:
+            raise ValueError(f"spec_k {spec_k} < 0")
+        if not 0.0 <= repetitiveness <= 1.0:
+            raise ValueError(f"repetitiveness {repetitiveness} not in [0, 1]")
         app = AppSpec(arch=arch, shape="decode_32k",
                       shape_overrides={"seq_len": max_len,
                                        "global_batch": num_slots * replicas,
-                                       "serve_replicas": replicas},
+                                       "serve_replicas": replicas,
+                                       "serve_repetitiveness": repetitiveness},
                       run=f"serve --engine continuous --kv-layout {kv_layout}")
         cfg = app.model_config
         if cfg.family not in SERVABLE_FAMILIES:
@@ -205,15 +232,26 @@ class ServeEngine:
                 self.model, self.mesh,
                 use_kernel=(self.kv_kernel == "pallas"))
             chunk = build_prefill_chunk_step_paged(self.model, self.mesh)
+            verify = build_verify_step_slots_paged(self.model, self.mesh)
         else:
             self.kv_kernel = "gather"
             decode = build_decode_step_slots(self.model, self.mesh)
             chunk = build_prefill_chunk_step(self.model, self.mesh)
+            verify = build_verify_step_slots(self.model, self.mesh)
         self._decode = jax.jit(decode, donate_argnums=(1,))
         # kv_bound (arg 6) is static: it sizes the chunk's KV read-back,
         # so the chunk jit cache is (chunk buckets) x (bound buckets)
         self._chunk = jax.jit(chunk, donate_argnums=(1,),
                               static_argnums=(6,))
+        # speculative verify step: jit is lazy, so building it costs
+        # nothing until spec_k > 0 actually drives a verify tick
+        self._verify = jax.jit(verify, donate_argnums=(1,))
+        # spec_k=None defers to the tuner's pick for this trace shape
+        # (plan.serve_spec_k, from the serve_repetitiveness hint); the
+        # Pallas kernel still serves the s=1 ticks — verify bursts read
+        # through the (token-identical) gather path inside the step
+        self.spec_k = self.plan.serve_spec_k if spec_k is None else spec_k
+        self.drafter = drafter
 
     # -- step wrappers bound to the params ---------------------------------
     def prefill_fn(self, tokens: jax.Array, last: int | None = None):
@@ -229,6 +267,11 @@ class ServeEngine:
         """Prefill one prompt chunk straight into the pool cache (donated)."""
         return self._chunk(self.params, cache, tokens, slot, offset,
                            n_valid, *extras)
+
+    def verify_fn(self, cache, tokens, active, *extras):
+        """Score a (num_slots, k+1) speculative batch; logits at every
+        position (cache donated; index stays host-authoritative)."""
+        return self._verify(self.params, cache, tokens, active, *extras)
 
     # -- driving -----------------------------------------------------------
     def make_pool(self, prefix_cache: bool | None = None):
@@ -257,7 +300,8 @@ class ServeEngine:
 
     def run(self, requests, policy: str = "continuous",
             prefill_chunk: int | None = None,
-            prefix_cache: bool | None = None) -> ServeStats:
+            prefix_cache: bool | None = None,
+            spec_k: int | None = None) -> ServeStats:
         """Drain `requests` under `policy` ('continuous' | 'static').
 
         A fresh pool per run keeps back-to-back policy comparisons honest
@@ -266,14 +310,22 @@ class ServeEngine:
         run (0 = blocking full-prompt prefill); ``prefix_cache`` toggles
         the shared-prefix KV cache for this run — cached and cache-off
         runs share every jitted step, so either comparison is free.
+        ``spec_k`` overrides the engine's speculative draft length for
+        this run (0 = plain one-token decode) — spec-on and spec-off runs
+        also share every jitted step, and their token streams are
+        bit-identical by construction.
         """
         chunk = self.prefill_chunk if prefill_chunk is None else prefill_chunk
+        k = self.spec_k if spec_k is None else spec_k
         sched = Scheduler(self.make_pool(prefix_cache=prefix_cache),
                           self.prefill_fn, self.decode_fn,
                           eos_id=self.eos_id, policy=policy,
                           sampler=self.sampler, chunk_step_fn=self.chunk_fn,
                           prefill_chunk=chunk,
-                          prefill_chunk_unit=self.chunk_unit)
+                          prefill_chunk_unit=self.chunk_unit,
+                          verify_fn=self.verify_fn if k else None,
+                          spec_k=k, drafter=self.drafter,
+                          vocab_size=self.cfg.vocab_size)
         stats = sched.run(list(requests))
         self.log(f"[serve:{self.kv_layout}:{policy}] {stats.summary()}")
         return stats

@@ -235,6 +235,24 @@ class KVCachePool:
         """Extra per-step arguments for the jitted decode step."""
         return ()
 
+    def grow_for_burst(self, slot: int, want_tokens: int) -> int:
+        """KV positions backed for a speculative verify burst starting at
+        the slot's current length.  Contiguous slots reserve max_len up
+        front, so burst capacity is just the slot's length headroom."""
+        return max(int(min(want_tokens, self.max_len - self.lengths[slot])),
+                   0)
+
+    def sync_index(self) -> None:
+        """Re-upload the host length mirror as the device index vector.
+
+        After a verify step the device index is stale by design (the step
+        returns it unchanged — acceptance is a host decision), so the
+        scheduler calls this once per spec step.  Free slots sync to 0,
+        which is harmless: admission re-seeds their index before any
+        decode reads it."""
+        self.cache = dict(self.cache,
+                          index=jnp.asarray(self.lengths, jnp.int32))
+
     def update(self, new_cache: dict, active_slots=()) -> None:
         """Adopt the cache returned by a (donating) decode step; the length
         mirror advances only for the slots that were active this step."""
@@ -504,6 +522,38 @@ class PagedKVCachePool:
 
     def decode_extras(self) -> tuple:
         return (jnp.asarray(self.page_table),)
+
+    def grow_for_burst(self, slot: int, want_tokens: int) -> int:
+        """Opportunistically back up to `want_tokens` KV positions past
+        `slot`'s current length for a speculative verify burst, using ONLY
+        genuinely free pages — never the prefix cache's reclaimable pages
+        and never another request's (no preemption): a burst is a
+        throughput bonus, not a reservation, so it must not change
+        admission or eviction behaviour.  Returns how many positions are
+        backed (>= 1 after ``prepare_decode`` granted the mandatory next
+        token); verify writes beyond that divert to junk page 0 via the
+        attention ok-guard and the scheduler caps acceptance to the
+        backed count."""
+        target = min(int(self.lengths[slot]) + want_tokens, self.max_len)
+        while int(self._pages_held[slot]) * self.page_size < target:
+            held = int(self._pages_held[slot])
+            if held >= self.max_pages or not self._free_pages:
+                break
+            page = self._free_pages.pop()
+            self.page_refs[page] = 1
+            self.page_cached[page] = False
+            self.page_table[slot, held] = page
+            self._pages_held[slot] = held + 1
+        backed = int(self._pages_held[slot]) * self.page_size \
+            - int(self.lengths[slot])
+        return max(min(backed, want_tokens,
+                       self.max_len - int(self.lengths[slot])), 0)
+
+    def sync_index(self) -> None:
+        """Re-upload the host length mirror as the device index (see the
+        contiguous pool's ``sync_index``)."""
+        self.cache = dict(self.cache,
+                          index=jnp.asarray(self.lengths, jnp.int32))
 
     def update(self, new_cache: dict, active_slots=()) -> None:
         self.cache = new_cache

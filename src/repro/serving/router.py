@@ -159,6 +159,38 @@ class RouterStats:
         decoded — the overlap chunked prefill exists to create."""
         return sum(s.overlap_steps for s in self.replica_stats)
 
+    @property
+    def spec_verify_steps(self) -> int:
+        return sum(s.spec_verify_steps for s in self.replica_stats)
+
+    @property
+    def spec_drafted_tokens(self) -> int:
+        return sum(s.spec_drafted_tokens for s in self.replica_stats)
+
+    @property
+    def spec_accepted_tokens(self) -> int:
+        return sum(s.spec_accepted_tokens for s in self.replica_stats)
+
+    @property
+    def accepted_per_verify(self) -> float:
+        """Fleet-wide tokens emitted per speculative verify event — the
+        same >1-means-spec-pays figure as ``ServeStats``, summed over
+        replicas before the ratio so busy and idle replicas weight by
+        their actual verify traffic."""
+        if not self.spec_verify_steps:
+            return 0.0
+        return ((self.spec_verify_steps + self.spec_accepted_tokens)
+                / self.spec_verify_steps)
+
+    @property
+    def effective_top_k(self) -> dict:
+        """rid -> effective top-k, merged across replicas (a rid completes
+        on exactly one replica, so the union is disjoint)."""
+        out: dict = {}
+        for s in self.replica_stats:
+            out.update(s.effective_top_k)
+        return out
+
     def summary(self) -> str:
         per = ", ".join(f"r{i}:{s.generated_tokens}t"
                         for i, s in enumerate(self.replica_stats))
@@ -166,6 +198,10 @@ class RouterStats:
         if self.prefix_hits:
             re += (f", {self.prefix_hits} prefix hits "
                    f"({self.prefill_tokens_saved}t prefill saved)")
+        if self.spec_verify_steps:
+            re += (f", spec {self.accepted_per_verify:.2f} tok/verify "
+                   f"({self.spec_accepted_tokens}/"
+                   f"{self.spec_drafted_tokens} drafts accepted)")
         return (f"{len(self.results)} requests over "
                 f"{len(self.replica_stats)} replicas, "
                 f"{self.generated_tokens} tokens in {self.wall_s:.3f}s -> "
@@ -221,7 +257,8 @@ class ReplicaRouter:
               policy: str = "least_loaded", page_size: int = 0,
               num_pages: int = 0, prefill_chunk: int | None = None,
               prefix_cache: bool = False, kv_kernel: str = "auto",
-              log=print) -> "ReplicaRouter":
+              spec_k: int | None = 0, drafter=None,
+              repetitiveness: float = 0.0, log=print) -> "ReplicaRouter":
         """Build an N-replica fleet, splitting the tuner budget N ways.
 
         ``kv_layout`` may be comma-separated (``"paged,contiguous"``) and
@@ -249,7 +286,8 @@ class ReplicaRouter:
                     # apply to paged slots
                     prefix_cache=prefix_cache and lay == "paged",
                     kv_kernel=kv_kernel if lay == "paged" else "auto",
-                    log=log)
+                    spec_k=spec_k, drafter=drafter,
+                    repetitiveness=repetitiveness, log=log)
             fleet.append(built[lay])
         return cls(fleet, policy=policy, log=log)
 
@@ -262,6 +300,10 @@ class ReplicaRouter:
                 raise ValueError(
                     f"request {req.rid}: top_k {req.top_k} not in "
                     f"[0, {K_CAP}]")
+            top_p = getattr(req, "top_p", 1.0)
+            if not 0.0 < top_p <= 1.0:
+                raise ValueError(
+                    f"request {req.rid}: top_p {top_p} not in (0, 1]")
             if all(len(req.prompt) > s.pool.max_len for s in scheds):
                 raise ValueError(
                     f"request {req.rid}: prompt ({len(req.prompt)}) does "
@@ -375,6 +417,11 @@ class ReplicaRouter:
                                            if prefill_chunk is None
                                            else prefill_chunk),
                             prefill_chunk_unit=getattr(e, "chunk_unit", 16),
+                            verify_fn=(e.verify_fn
+                                       if getattr(e, "spec_k", 0) else None),
+                            spec_k=getattr(e, "spec_k", 0),
+                            drafter=getattr(e, "drafter", None),
+                            vocab_size=e.cfg.vocab_size,
                             vclock=RoundClock(shared))
                   for e in self.engines]
         self._validate(requests, scheds)

@@ -26,12 +26,20 @@ iterations) tie-break on the **highest request id** — a property of the
 request, not of queue insertion order, so the victim is deterministic
 however the trace was assembled.
 
-Sampling is per-request: ``Request.temperature`` / ``Request.top_k``
-ride through per-slot vectors into one jitted sampler call per step
-(``serving/sampling.py``); the default (temperature 0) is greedy argmax.
-The loop is host-driven, one slot-wise decode over the whole pool per
-iteration, one device->host sync per step for the sampled tokens.
-Everything is deterministic for a fixed trace.
+Sampling is per-request: ``Request.temperature`` / ``Request.top_k`` /
+``Request.top_p`` ride through per-slot vectors into one jitted sampler
+call per step (``serving/sampling.py``); the default (temperature 0) is
+greedy argmax.  The loop is host-driven, one slot-wise decode over the
+whole pool per iteration, one device->host sync per step for the sampled
+tokens.  Everything is deterministic for a fixed trace.
+
+With ``spec_k > 0`` (plus a ``verify_fn``) each decode tick becomes a
+draft-then-verify tick (``_spec_step``): a drafter proposes k tokens per
+slot from the slot's own history, one verify step scores all k+1
+positions against pool KV, and the slot accepts the longest draft prefix
+matching the sequential sampler's own ``(rid, step)`` draws — so
+speculative streams are bit-identical to ``spec_k == 0`` and a tick can
+emit up to k+1 tokens per slot for one jitted call.
 
 ``run()`` drains a whole trace, but every phase is also exposed as a
 step-wise API (``reset`` / ``try_admit`` / ``admit_from_queue`` / ``step``
@@ -74,7 +82,8 @@ import numpy as np
 
 from repro.serving.pool import PoolExhausted
 from repro.serving.prefill import PrefillManager
-from repro.serving.sampling import K_CAP
+from repro.serving.sampling import K_CAP, effective_top_k
+from repro.serving.spec import NGramDrafter
 
 
 class VirtualClock:
@@ -134,6 +143,7 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0      # 0 = greedy
     top_k: int = 0                # 0 = no top-k filter
+    top_p: float = 1.0            # 1 = no nucleus filter
 
 
 @dataclasses.dataclass
@@ -190,10 +200,30 @@ class ServeStats:
     prefix_misses: int = 0        # admissions with no cached prefix
     prefill_tokens_saved: int = 0  # prompt tokens skipped via cache hits
     prefix_evictions: int = 0     # cache cells reclaimed under pressure
+    # speculative decoding observability (zeros with spec_k == 0).
+    # spec_verify_steps counts per-SLOT scoring events (one per active
+    # slot per verify invocation), so accepted_per_verify is the clean
+    # per-request speedup factor, not inflated by batch width
+    spec_verify_steps: int = 0    # slot-verify scoring events
+    spec_drafted_tokens: int = 0  # draft tokens proposed (k per slot-step)
+    spec_accepted_tokens: int = 0  # draft tokens accepted (burst - 1 each)
+    # effective per-request top-k after the vocab/K_CAP cap: {rid: k} for
+    # every admitted request that asked for a top-k filter — surfaces what
+    # the sampler actually applied instead of silently clamping
+    effective_top_k: dict = dataclasses.field(default_factory=dict)
 
     @property
     def tokens_per_s(self) -> float:
         return self.generated_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def accepted_per_verify(self) -> float:
+        """Tokens emitted per verify step (accepted drafts + the bonus
+        token each step always emits) — > 1 means speculation is paying."""
+        if not self.spec_verify_steps:
+            return 0.0
+        return (self.spec_verify_steps + self.spec_accepted_tokens) \
+            / self.spec_verify_steps
 
     def summary(self) -> str:
         lat = [r.latency_s for r in self.results]
@@ -201,6 +231,10 @@ class ServeStats:
         if self.prefix_hits:
             pre += (f", {self.prefix_hits} prefix hits "
                     f"({self.prefill_tokens_saved}t prefill saved)")
+        if self.spec_verify_steps:
+            pre += (f", spec {self.accepted_per_verify:.2f} tok/verify "
+                    f"({self.spec_accepted_tokens}/{self.spec_drafted_tokens}"
+                    f" drafts accepted)")
         return (f"{len(self.results)} requests, {self.generated_tokens} tokens "
                 f"in {self.wall_s:.3f}s -> {self.tokens_per_s:.1f} tok/s | "
                 f"{self.decode_steps} decode steps, "
@@ -262,11 +296,18 @@ class Scheduler:
                  eos_id: int | None = None, policy: str = "continuous",
                  sampler=None, clock=time.perf_counter,
                  chunk_step_fn=None, prefill_chunk: int = 0,
-                 prefill_chunk_unit: int = 16, vclock=None):
+                 prefill_chunk_unit: int = 16, vclock=None,
+                 verify_fn=None, spec_k: int = 0, drafter=None,
+                 vocab_size: int | None = None):
         if policy not in ("continuous", "static"):
             raise ValueError(policy)
         if prefill_chunk < 0 or prefill_chunk_unit < 1:
             raise ValueError((prefill_chunk, prefill_chunk_unit))
+        if spec_k < 0:
+            raise ValueError(f"spec_k {spec_k} < 0")
+        if spec_k and verify_fn is None:
+            raise ValueError("spec_k > 0 needs a verify_fn "
+                             "(training/steps.build_verify_step_slots*)")
         self.pool = pool
         self.prefill_fn = prefill_fn        # (tokens (1,s)) -> logits, cache
         self.decode_fn = decode_fn          # (cache, tokens, active, *extras)
@@ -281,6 +322,14 @@ class Scheduler:
         self.sampler = sampler              # None -> greedy argmax
         self.clock = clock
         self.vclock = vclock or VirtualClock()
+        # draft-then-verify speculative decoding: k drafts per slot, one
+        # verify step scoring all k+1 positions (verify_fn), acceptance on
+        # the host against the same (rid, step) sampler draws
+        self.verify_fn = verify_fn          # (cache, toks, active, *extras)
+        self.spec_k = spec_k
+        self.drafter = drafter if drafter is not None else \
+            (NGramDrafter() if spec_k else None)
+        self.vocab_size = vocab_size        # for effective-top-k reporting
         self.all_greedy = False
         self.reset()
 
@@ -299,6 +348,10 @@ class Scheduler:
         self._peak_resident = 0
         self._preemptions = 0
         self._overlap = 0
+        self._spec_verifies = 0
+        self._spec_drafted = 0
+        self._spec_accepted = 0
+        self._eff_topk: dict[int, int] = {}
         self._t0 = self.clock() if t0 is None else t0
         self._v0 = self.vclock.t           # virtual submission time
         self._mgr = None if self.chunk_step_fn is None else \
@@ -346,7 +399,11 @@ class Scheduler:
             if not 0 <= req.top_k <= K_CAP:
                 raise ValueError(
                     f"request {req.rid}: top_k {req.top_k} not in "
-                    f"[0, {K_CAP}]")
+                    f"[0, {K_CAP}] — the sampler would silently clamp it")
+            top_p = getattr(req, "top_p", 1.0)
+            if not 0.0 < top_p <= 1.0:
+                raise ValueError(
+                    f"request {req.rid}: top_p {top_p} not in (0, 1]")
             worst = self.worst_resident(_Entry(req))
             if not self.pool.can_ever_serve(worst):
                 raise PoolExhausted(
@@ -370,6 +427,7 @@ class Scheduler:
         n = logits_last.shape[0]
         temps = np.zeros((n,), np.float32)
         topks = np.zeros((n,), np.int32)
+        topps = np.ones((n,), np.float32)
         rids = np.zeros((n,), np.int32)
         steps = np.zeros((n,), np.int32)
         for i, en in enumerate(entries):
@@ -377,11 +435,40 @@ class Scheduler:
                 continue
             temps[i] = en.req.temperature
             topks[i] = en.req.top_k
+            topps[i] = getattr(en.req, "top_p", 1.0)
             rids[i] = en.req.rid
             steps[i] = len(en.st.tokens)
         return np.asarray(self.sampler(
             logits_last, jnp.asarray(temps), jnp.asarray(topks),
-            jnp.asarray(rids), jnp.asarray(steps)))
+            jnp.asarray(topps), jnp.asarray(rids), jnp.asarray(steps)))
+
+    def _sample_rows_multi(self, logits, width):
+        """Sample ALL `width` speculated positions of every slot in one
+        sampler call: row (slot, j) draws with the slot's request styling
+        at generation step ``len(st.tokens) + j`` — the very key the
+        sequential sampler would use if the j-th draft is accepted, which
+        is what makes accepted bursts bit-identical to one-at-a-time
+        decoding.  logits: (S, width, vocab) -> (S, width) int32."""
+        if self.sampler is None or self.all_greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        S = logits.shape[0]
+        temps = np.zeros((S, width), np.float32)
+        topks = np.zeros((S, width), np.int32)
+        topps = np.ones((S, width), np.float32)
+        rids = np.zeros((S, width), np.int32)
+        steps = np.zeros((S, width), np.int32)
+        for slot, en in self.active.items():
+            temps[slot, :] = en.req.temperature
+            topks[slot, :] = en.req.top_k
+            topps[slot, :] = getattr(en.req, "top_p", 1.0)
+            rids[slot, :] = en.req.rid
+            steps[slot, :] = len(en.st.tokens) + np.arange(width)
+        flat = self.sampler(
+            logits.reshape(S * width, -1),
+            jnp.asarray(temps.reshape(-1)), jnp.asarray(topks.reshape(-1)),
+            jnp.asarray(topps.reshape(-1)), jnp.asarray(rids.reshape(-1)),
+            jnp.asarray(steps.reshape(-1)))
+        return np.asarray(flat).reshape(S, width)
 
     # -- admission ---------------------------------------------------------
     def _probe_prefix(self, entry: _Entry):
@@ -418,6 +505,12 @@ class Scheduler:
     def _admit(self, entry: _Entry) -> None:
         now = self.clock()
         req = entry.req
+        if req.top_k:
+            # surface what the sampler will actually apply (vocab and
+            # K_CAP caps) — validated <= K_CAP, but a small-vocab model
+            # can still cap below the ask
+            self._eff_topk[req.rid] = effective_top_k(
+                req.top_k, self.vocab_size or req.top_k)
         if entry.st is None:
             s = len(req.prompt)
             budget = self.pool.max_len - s + 1   # writes stop at max_len - 1
@@ -577,6 +670,9 @@ class Scheduler:
         self._peak = max(self._peak, self.in_flight)
         self._peak_resident = max(self._peak_resident,
                                   int(self.pool.lengths.sum()))
+        if self.spec_k and self.verify_fn is not None:
+            self._spec_step(chunked)
+            return evicted
         logits, new_cache = self.decode_fn(
             self.pool.cache, jnp.asarray(self._last_tokens),
             jnp.asarray(self._active_mask), *self.pool.decode_extras())
@@ -606,6 +702,93 @@ class Scheduler:
                 self.pool.free(slot)
         return evicted
 
+    # -- speculative decode -------------------------------------------------
+    def _spec_step(self, chunked: int) -> None:
+        """One draft-then-verify tick over the active set.
+
+        Per slot: the drafter proposes k tokens from the slot's own
+        history; the verify step scores all k+1 positions (pending token
+        + drafts) against pool KV in one jitted call; every position is
+        sampled with the sequential sampler's own ``(rid, step)`` key;
+        the slot then accepts the longest prefix of draws that matches
+        its drafts — exactly the tokens one-at-a-time decode would have
+        produced, so speculative streams are bit-identical to spec_k=0.
+
+        Page charging: ``prepare_decode`` already granted the mandatory
+        next-token position (same starvation/preemption semantics as
+        non-speculative decode); ``grow_for_burst`` then backs as much of
+        the burst as genuinely free pages allow, acceptance is capped at
+        the backed count, and any verify write past it lands in junk
+        page 0 via the attention ok-guard — never in a live (possibly
+        prefix-shared) page.  KV written for rejected drafts is
+        overwritten by the next step before any causal mask admits it.
+        The device index is not advanced by the verify step (acceptance
+        is a host decision): ``pool.sync_index`` re-uploads the length
+        mirror once per tick.
+        """
+        S = self.pool.num_slots
+        k = self.spec_k
+        tok_mat = np.zeros((S, k + 1), np.int32)
+        caps = np.zeros((S,), np.int64)
+        drafts: dict[int, list] = {}
+        for slot, en in self.active.items():
+            hist = np.asarray(en.req.prompt).tolist() + en.st.tokens
+            d = self.drafter.draft(hist, k)
+            drafts[slot] = d
+            tok_mat[slot, 0] = self._last_tokens[slot, 0]
+            tok_mat[slot, 1:] = d
+            caps[slot] = self.pool.grow_for_burst(slot, k + 1)
+        logits, new_cache = self.verify_fn(
+            self.pool.cache, jnp.asarray(tok_mat),
+            jnp.asarray(self._active_mask), *self.pool.decode_extras())
+        self.pool.adopt(new_cache)
+        self.vclock.advance(1)
+        self._steps += 1
+        self._busy += len(self.active)
+        if chunked:
+            self._overlap += 1
+        toks = self._sample_rows_multi(logits, k + 1)
+        now = self.clock()
+        vnow = self.vclock.t
+        for slot, en in list(self.active.items()):
+            st = en.st
+            d = drafts[slot]
+            cap = int(caps[slot])        # >= 1: prepare_decode granted it
+            emitted = 0
+            j = 0
+            finished = False
+            while True:
+                tok = int(toks[slot, j])
+                st.tokens.append(tok)
+                emitted += 1
+                if len(st.tokens) >= st.max_new_tokens or \
+                        tok == self.eos_id:
+                    finished = True
+                    break
+                # j == k: no draft beyond position k to validate;
+                # emitted == cap: sample j+1's query position is not
+                # backed by a page; tok != d[j]: the draft fed at
+                # position j+1 is not what sequential decode would see
+                if j >= k or emitted >= cap or tok != d[j]:
+                    break
+                j += 1
+            self._spec_verifies += 1
+            self._spec_drafted += k
+            self._spec_accepted += emitted - 1
+            self.pool.set_length(slot,
+                                 int(self.pool.lengths[slot]) + emitted)
+            if finished:
+                st.t_done = now
+                st.v_done = vnow
+                self.done.append(st)
+                del self.active[slot]
+                self._active_mask[slot] = 0
+                self._last_tokens[slot, 0] = 0
+                self.pool.free(slot)
+            else:
+                self._last_tokens[slot, 0] = int(toks[slot, emitted - 1])
+        self.pool.sync_index()
+
     # -- results -----------------------------------------------------------
     def stats(self) -> ServeStats:
         wall = self.clock() - self._t0
@@ -628,7 +811,11 @@ class Scheduler:
             prefix_hits=pc.hits if pc else 0,
             prefix_misses=pc.misses if pc else 0,
             prefill_tokens_saved=pc.tokens_saved if pc else 0,
-            prefix_evictions=pc.evictions if pc else 0)
+            prefix_evictions=pc.evictions if pc else 0,
+            spec_verify_steps=self._spec_verifies,
+            spec_drafted_tokens=self._spec_drafted,
+            spec_accepted_tokens=self._spec_accepted,
+            effective_top_k=dict(self._eff_topk))
 
     # -- main loop ---------------------------------------------------------
     def run(self, requests) -> ServeStats:

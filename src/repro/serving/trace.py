@@ -6,6 +6,16 @@ lengths with a clipped Zipf draw, which is exactly the regime where
 continuous batching beats gang scheduling (a static batch waits for its
 longest member).  Prompt lengths are bucketed to powers of two so the
 prefill jit cache stays small.
+
+``repetitive_trace`` is the speculative-decoding regime: long greedy
+generations whose token streams settle into short cycles (template
+expansion, code boilerplate, list continuation), where an n-gram drafter
+accepts whole bursts.  ``trace_repetitiveness`` measures a trace's
+n-gram self-overlap in [0, 1] — the hint ``launch/serve.py --spec-k
+auto`` feeds the tuner's ``plan.serve_spec_k`` pick.
+
+All traces take per-request sampling knobs (``temperature`` / ``top_k``
+/ ``top_p``) and are deterministic for a fixed seed.
 """
 
 from __future__ import annotations
@@ -26,7 +36,8 @@ def _bucket(n: int, max_prompt: int) -> int:
 
 def zipf_trace(n: int, vocab_size: int, *, max_prompt: int = 32,
                max_new: int = 32, alpha: float = 1.3, seed: int = 0,
-               temperature: float = 0.0, top_k: int = 0) -> list[Request]:
+               temperature: float = 0.0, top_k: int = 0,
+               top_p: float = 1.0) -> list[Request]:
     """n requests with Zipf-distributed prompt/generation lengths."""
     rng = np.random.RandomState(seed)
     reqs = []
@@ -37,14 +48,15 @@ def zipf_trace(n: int, vocab_size: int, *, max_prompt: int = 32,
         prompt = rng.randint(1, max(vocab_size - 1, 2),
                              size=(plen,)).astype(np.int32)
         reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=nnew,
-                            temperature=temperature, top_k=top_k))
+                            temperature=temperature, top_k=top_k,
+                            top_p=top_p))
     return reqs
 
 
 def longprompt_trace(n: int, vocab_size: int, *, max_prompt: int = 128,
                      max_new: int = 16, alpha: float = 1.5, seed: int = 0,
-                     temperature: float = 0.0,
-                     top_k: int = 0) -> list[Request]:
+                     temperature: float = 0.0, top_k: int = 0,
+                     top_p: float = 1.0) -> list[Request]:
     """n requests whose prompt lengths cluster *near* ``max_prompt``.
 
     The shortfall below max_prompt is the Zipf draw (so most prompts sit
@@ -63,15 +75,16 @@ def longprompt_trace(n: int, vocab_size: int, *, max_prompt: int = 128,
         prompt = rng.randint(1, max(vocab_size - 1, 2),
                              size=(plen,)).astype(np.int32)
         reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=nnew,
-                            temperature=temperature, top_k=top_k))
+                            temperature=temperature, top_k=top_k,
+                            top_p=top_p))
     return reqs
 
 
 def sharedprefix_trace(n: int, vocab_size: int, *, n_heads: int = 4,
                        head_len: int = 32, max_suffix: int = 24,
                        max_new: int = 8, alpha: float = 1.2, seed: int = 0,
-                       temperature: float = 0.0,
-                       top_k: int = 0) -> list[Request]:
+                       temperature: float = 0.0, top_k: int = 0,
+                       top_p: float = 1.0) -> list[Request]:
     """n requests whose prompts open with one of ``n_heads`` shared heads.
 
     Head popularity is Zipf-clustered (head 0 dominates, like a fleet
@@ -95,18 +108,70 @@ def sharedprefix_trace(n: int, vocab_size: int, *, n_heads: int = 4,
         reqs.append(Request(rid=i,
                             prompt=np.concatenate([heads[h], suffix]),
                             max_new_tokens=nnew,
-                            temperature=temperature, top_k=top_k))
+                            temperature=temperature, top_k=top_k,
+                            top_p=top_p))
     return reqs
 
 
 def uniform_trace(n: int, vocab_size: int, *, prompt_len: int = 16,
                   max_new: int = 8, seed: int = 0,
-                  temperature: float = 0.0, top_k: int = 0) -> list[Request]:
+                  temperature: float = 0.0, top_k: int = 0,
+                  top_p: float = 1.0) -> list[Request]:
     """n same-length requests — the static/continuous equivalence case."""
     rng = np.random.RandomState(seed)
     return [Request(rid=i,
                     prompt=rng.randint(1, max(vocab_size - 1, 2),
                                        size=(prompt_len,)).astype(np.int32),
                     max_new_tokens=max_new,
-                    temperature=temperature, top_k=top_k)
+                    temperature=temperature, top_k=top_k, top_p=top_p)
             for i in range(n)]
+
+
+def repetitive_trace(n: int, vocab_size: int, *, prompt_len: int = 8,
+                     max_new: int = 48, seed: int = 0,
+                     temperature: float = 0.0, top_k: int = 0,
+                     top_p: float = 1.0) -> list[Request]:
+    """n requests in the draft-then-verify sweet spot: short prompts,
+    LONG greedy generations over a small effective vocabulary.
+
+    The prompts cycle a short random period, so both the prompt and (for
+    small-vocab models like ``picolm-4-smoke``) the greedy continuation
+    are n-gram-predictable — the stand-in for repetitive real text
+    (template fill-in, boilerplate, list continuation), which is where a
+    history drafter's accepted-tokens/verify-step clears 1.  On a big
+    random-init vocab the streams are chaotic and acceptance drops to
+    ~chance — exactly the regime the tuner keeps spec off for.
+    """
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        period = int(rng.randint(2, 5))
+        base = rng.randint(1, max(vocab_size - 1, 2), size=(period,))
+        prompt = np.resize(base, prompt_len).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=max_new,
+                            temperature=temperature, top_k=top_k,
+                            top_p=top_p))
+    return reqs
+
+
+def trace_repetitiveness(requests, max_n: int = 3) -> float:
+    """Mean n-gram self-overlap of a trace's prompts, in [0, 1].
+
+    For each prompt position past the first ``max_n`` tokens: does the
+    ``max_n``-gram ending there occur earlier in the prompt?  The hit
+    fraction is exactly the n-gram drafter's hit condition evaluated on
+    the only tokens known before generation starts, so it proxies the
+    per-draft accept probability — the tuner turns it into
+    ``plan.serve_spec_k`` via the napkin estimate in
+    ``core/tuning.spec_k_for``.
+    """
+    hits = total = 0
+    for req in requests:
+        p = [int(t) for t in np.asarray(req.prompt)]
+        for i in range(max_n, len(p)):
+            gram = p[i - max_n + 1:i + 1]
+            found = any(p[j:j + max_n] == gram
+                        for j in range(i - max_n))
+            hits += bool(found)
+            total += 1
+    return hits / total if total else 0.0

@@ -237,3 +237,47 @@ def build_decode_step_slots_paged(model, mesh=None, use_kernel: bool = False):
         return logits, {"k": new_cache["k"], "v": new_cache["v"],
                         "index": new_index}
     return decode_step
+
+
+def build_verify_step_slots(model, mesh=None):
+    """Speculative VERIFY step over a contiguous slot pool.
+
+    ``tokens`` is ``(num_slots, k+1)`` — each row's pending token followed
+    by its k drafted tokens — and the step returns logits at **every**
+    speculated position ``(num_slots, k+1, vocab)``, scoring all of them
+    against pool KV in one jitted call (the multi-position generalization
+    of the single-token decode scatter in ``models/layers.attention``).
+    Positions past a slot's capacity drop harmlessly; rejected-draft KV is
+    overwritten by the next step before any causal mask admits it.
+
+    The returned cache keeps ``index`` UNCHANGED: how many of the k+1
+    positions became real tokens is the host's acceptance decision, so the
+    scheduler re-uploads its post-acceptance length mirror
+    (``pool.sync_index``) instead of trusting a device-side +k+1.
+    """
+    def verify_step(params, cache, tokens, active):
+        logits, new_cache = model.decode_step(params, cache, tokens, mesh)
+        return logits, dict(new_cache, index=cache["index"])
+    return verify_step
+
+
+def build_verify_step_slots_paged(model, mesh=None):
+    """Speculative VERIFY step over a paged KV pool.
+
+    Same contract as ``build_verify_step_slots`` plus the page table
+    argument; inactive rows divert through junk page 0 exactly like
+    ``build_decode_step_slots_paged``, and per-position page lookup keeps
+    the same ok-guard, so a burst past a slot's page-run capacity can
+    never scribble into a (possibly prefix-shared) live page.  The fused
+    Pallas kernel is single-token-only, so verify always reads through
+    the gather path — token-identical to the kernel by the PR 6 sweep.
+    ``index`` stays host-authoritative (see ``build_verify_step_slots``).
+    """
+    def verify_step(params, cache, tokens, active, pages):
+        keep = active.astype(bool)
+        safe_pages = jnp.where(keep[:, None], pages, 0)
+        dcache = dict(cache, pages=safe_pages)
+        logits, new_cache = model.decode_step(params, dcache, tokens, mesh)
+        return logits, {"k": new_cache["k"], "v": new_cache["v"],
+                        "index": cache["index"]}
+    return verify_step
