@@ -44,6 +44,17 @@ traffic lives in):
    same paged engine with ``spec_k=0`` vs ``spec_k=4``.  Gated on
    bit-identical token streams AND accepted-tokens/verify-step > 1 —
    the spec path must buy multi-token ticks or it is dead weight.
+8. **fixed vs autoscaling fleet under open-loop Poisson traffic**
+   (this PR): the same Zipf trace stamped with Poisson
+   ``arrival_vstep``s (exponential gaps on the VIRTUAL step clock —
+   never wall time) through a 1-replica router vs an autoscaling
+   1..``FLEET`` router with a TTFT SLO.  Gated on bit-identical
+   streams vs the closed-loop replay of the same trace (arrival
+   timing moves latency, never sampling) AND the autoscaler strictly
+   beating the fixed fleet on both goodput-under-SLO and p99 TTFT
+   (vsteps).  The regression gate then guards ``p99_ttft_steps``
+   (ceiling) and ``goodput_tokens`` (floor) — wall-clock never enters
+   an SLO metric.
 
 The layout x policy grid cells run with ``prefill_chunk=0`` (blocking)
 so their decode-step counts stay comparable across baselines; the
@@ -77,6 +88,12 @@ ARCH = "deepseek-7b-smoke"
 SPEC_ARCH = "picolm-4-smoke"  # 4-token-vocab probe: n-gram-predictable
 #                               greedy streams, the spec-decode regime
 SPEC_K = 4               # draft tokens per verify step in the spec cells
+OPENLOOP_GAP = 6.0       # mean Poisson inter-arrival gap, virtual steps
+OPENLOOP_SEED = 3        # arrival-process seed (trace seed stays TRACE_SEED)
+OPENLOOP_SLO_TTFT = 20   # TTFT goodput deadline, vsteps — sits between the
+#                          autoscaled and fixed fleets' p99 so the goodput
+#                          separation the autoscaler buys is visible
+OPENLOOP_SLO_E2E = 120   # end-to-end goodput deadline, vsteps
 
 
 def _kv_token_bytes(cfg) -> int:
@@ -485,6 +502,53 @@ def run_smoke(out_path: str = "BENCH_serving.json",
             "route_policy": "prefix_affinity",
             "load_imbalance": _num(stats.imbalance),
         }
+    # open-loop Poisson traffic: the same Zipf trace stamped with
+    # virtual-step arrivals, through a fixed 1-replica router vs an
+    # autoscaling 1..FLEET router under a TTFT/e2e SLO.  All SLO and
+    # percentile metrics below are vstep-derived (deterministic);
+    # tokens_per_s stays the only wall-clock (advisory) field.
+    import dataclasses
+
+    from repro.serving import AutoscalePolicy, with_arrivals
+    oreqs = with_arrivals(_trace(n_requests, single_cont, max_new=max_new),
+                          "poisson", mean_gap=OPENLOOP_GAP,
+                          seed=OPENLOOP_SEED)
+    closed_reqs = [dataclasses.replace(r, arrival_vstep=0) for r in oreqs]
+    slo = dict(slo_ttft_steps=OPENLOOP_SLO_TTFT,
+               slo_e2e_steps=OPENLOOP_SLO_E2E)
+    fixed_router = _router(single_cont, fleet=1)
+    # no extra warm pass: same engine object as the cells above
+    ol_closed = fixed_router.run(closed_reqs, policy="continuous",
+                                 prefill_chunk=0, **slo)
+    ol_fixed = fixed_router.run(oreqs, policy="continuous",
+                                prefill_chunk=0, **slo)
+    auto_router = _router(single_cont)
+    ol_auto = auto_router.run(
+        oreqs, policy="continuous", prefill_chunk=0,
+        autoscale=AutoscalePolicy(min_replicas=1, max_replicas=FLEET),
+        **slo)
+    for name, stats in (("openloop_poisson_fixed", ol_fixed),
+                        ("openloop_poisson_autoscale", ol_auto)):
+        m = stats.to_metrics()
+        cells[name] = {
+            "tokens_per_s": round(stats.tokens_per_s, 2),
+            "arrivals": "poisson",
+            "arrival_gap": OPENLOOP_GAP,
+            "arrival_seed": OPENLOOP_SEED,
+            "slo_ttft_steps": OPENLOOP_SLO_TTFT,
+            "slo_e2e_steps": OPENLOOP_SLO_E2E,
+            "p50_ttft_steps": _num(stats.p50_ttft_steps),
+            "p99_ttft_steps": _num(stats.p99_ttft_steps),
+            "p50_e2e_steps": _num(stats.p50_e2e_steps),
+            "p99_e2e_steps": _num(stats.p99_e2e_steps),
+            "goodput_tokens": stats.goodput_tokens,
+            "generated_tokens": stats.generated_tokens,
+            "total_vsteps": stats.total_vsteps,
+            "peak_replicas": m["router_peak_replicas"],
+            "autoscale_grows": m["router_autoscale_grows"],
+            "autoscale_drains": m["router_autoscale_drains"],
+            "replicas": 1 if stats is ol_fixed else FLEET,
+        }
     out = {"arch": ARCH, "target": tight, "n_requests": n_requests,
            "max_len": MAX_LEN, "trace_seed": TRACE_SEED, "cells": cells}
     pc = cells["paged_continuous"]
@@ -496,6 +560,8 @@ def run_smoke(out_path: str = "BENCH_serving.json",
     lc = cells["longprompt_router_chunked"]
     sc = cells["sharedprefix_router_cold"]
     sh = cells["sharedprefix_router_cached"]
+    of_cell = cells["openloop_poisson_fixed"]
+    oa_cell = cells["openloop_poisson_autoscale"]
     print(f"paged {pc['tokens_per_s']} tok/s @ "
           f"{pc['hbm_bytes_per_admitted_token']} B/tok, peak "
           f"{pc['peak_active']} (fused kernel {pk['tokens_per_s']} tok/s, "
@@ -513,7 +579,13 @@ def run_smoke(out_path: str = "BENCH_serving.json",
           f"{sh['prefix_hit_rate']}) | spec k={SPEC_K} "
           f"{sn['accepted_per_verify']} tok/verify, "
           f"{sn['decode_steps']} steps vs {so['decode_steps']} spec-off "
-          f"(token-identical)")
+          f"(token-identical) | openloop poisson p99 TTFT "
+          f"{oa_cell['p99_ttft_steps']} vsteps autoscaled "
+          f"(peak {oa_cell['peak_replicas']} replicas, "
+          f"{oa_cell['autoscale_grows']}g/{oa_cell['autoscale_drains']}d) "
+          f"vs {of_cell['p99_ttft_steps']} fixed; goodput "
+          f"{oa_cell['goodput_tokens']}t vs {of_cell['goodput_tokens']}t "
+          f"under ttft<={OPENLOOP_SLO_TTFT}")
     # gates run BEFORE the write: a failing run must not replace the
     # checked-in baseline with its own (regressed) numbers
     try:
@@ -565,6 +637,34 @@ def run_smoke(out_path: str = "BENCH_serving.json",
                 f"prefill tokens ({sh['prefill_tokens']} + "
                 f"{sh['prefill_tokens_saved']} vs {sc['prefill_tokens']}) "
                 "— the savings accounting leaks")
+        tok_by_rid = lambda stats: {r.rid: r.tokens  # noqa: E731
+                                    for r in stats.results}
+        if tok_by_rid(ol_fixed) != tok_by_rid(ol_closed) or \
+                tok_by_rid(ol_auto) != tok_by_rid(ol_closed):
+            raise SystemExit(
+                "SMOKE FAIL: open-loop token streams differ from the "
+                "closed-loop replay of the same trace — arrival timing "
+                "and autoscaling must move latency, never sampling")
+        if not of_cell["goodput_tokens"] < oa_cell["goodput_tokens"] or \
+                not oa_cell["goodput_tokens"] == \
+                oa_cell["generated_tokens"]:
+            raise SystemExit(
+                f"SMOKE FAIL: autoscaled goodput "
+                f"{oa_cell['goodput_tokens']}t under the "
+                f"{OPENLOOP_SLO_TTFT}-vstep TTFT SLO must beat the fixed "
+                f"fleet's {of_cell['goodput_tokens']}t and cover all "
+                f"{oa_cell['generated_tokens']}t generated — scaling out "
+                f"is buying nothing")
+        if not (oa_cell["p99_ttft_steps"] or 0) < \
+                (of_cell["p99_ttft_steps"] or float("inf")):
+            raise SystemExit(
+                f"SMOKE FAIL: autoscaled p99 TTFT "
+                f"{oa_cell['p99_ttft_steps']} vsteps is not strictly "
+                f"below the fixed fleet's {of_cell['p99_ttft_steps']}")
+        if not oa_cell["autoscale_grows"] > 0:
+            raise SystemExit(
+                "SMOKE FAIL: the autoscaler never grew under Poisson "
+                "load — the open-loop cell is not exercising scaling")
         if baseline is not None:
             _check_regression(baseline, out, out_path)
     except SystemExit:
@@ -597,9 +697,12 @@ def _check_regression(baseline: dict, fresh: dict,
     decode step — the machine-independent component of tok/s, exactly
     what a batching/routing regression moves), the ``mean_ttft_steps``
     proxy (deterministic like tokens/step; lower is better, so the gate
-    is a ceiling), and ``prefill_tokens_saved`` (the prefix cache's
-    reuse, which must stay strictly positive wherever the baseline had
-    it).  Each metric guards **independently**: a baseline cell that
+    is a ceiling), ``p99_ttft_steps`` / ``goodput_tokens`` (the
+    open-loop SLO metrics — vstep percentiles gate as ceilings, goodput
+    as a floor; an idle fleet's NaN percentile serializes to null and
+    skips the gate rather than tripping it), and
+    ``prefill_tokens_saved`` (the prefix cache's reuse, which must stay
+    strictly positive wherever the baseline had it).  Each metric guards **independently**: a baseline cell that
     predates one metric must not silently skip the others' gates.
     Wall-clock tok/s swings 2-3x with CI-runner load on these sub-second
     cells, so it is reported as an advisory only.  Cells that vanished
@@ -635,6 +738,25 @@ def _check_regression(baseline: dict, fresh: dict,
                     f"{name}: {new.get('mean_ttft_steps')} TTFT vsteps > "
                     f"{ceiling:.3f} (baseline {old['mean_ttft_steps']} "
                     f"+ {REGRESSION_TOLERANCE:.0%})")
+        # percentile/goodput gates (open-loop cells): vstep-derived and
+        # deterministic like mean_ttft_steps.  `or 0` maps the null an
+        # idle fleet's NaN percentile serializes to — a baseline (or
+        # fresh) null never trips a gate, it just skips it.
+        if (old.get("p99_ttft_steps") or 0) > 0:
+            ceiling = old["p99_ttft_steps"] * (1.0 + REGRESSION_TOLERANCE)
+            if (new.get("p99_ttft_steps") or float("inf")) > ceiling:
+                bad.append(
+                    f"{name}: {new.get('p99_ttft_steps')} p99 TTFT vsteps "
+                    f"> {ceiling:.3f} (baseline {old['p99_ttft_steps']} "
+                    f"+ {REGRESSION_TOLERANCE:.0%})")
+        if old.get("goodput_tokens", 0) > 0:
+            floor = old["goodput_tokens"] * (1.0 - REGRESSION_TOLERANCE)
+            if new.get("goodput_tokens", 0) < floor:
+                bad.append(
+                    f"{name}: {new.get('goodput_tokens', 0)} goodput "
+                    f"tokens under SLO < {floor:.1f} (baseline "
+                    f"{old['goodput_tokens']} "
+                    f"- {REGRESSION_TOLERANCE:.0%})")
         if old.get("prefill_tokens_saved", 0) > 0 and \
                 new.get("prefill_tokens_saved", 0) <= 0:
             bad.append(f"{name}: prefix cache saved "

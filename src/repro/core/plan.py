@@ -41,6 +41,9 @@ class DeploymentPlan:
     #                                       ("" = n/a / contiguous layout)
     serve_spec_k: int = 0                 # speculative draft tokens per slot
     #                                       per verify step (0 = spec off)
+    serve_slo_ttft_steps: int = 0         # TTFT deadline (virtual steps) the
+    #                                       tuner suggests for SLO admission
+    serve_slo_e2e_steps: int = 0          # end-to-end deadline (virtual steps)
     sharding_fallbacks: list = dataclasses.field(default_factory=list)
     napkin: dict = dataclasses.field(default_factory=dict)
     notes: list = dataclasses.field(default_factory=list)
@@ -92,6 +95,11 @@ class DeploymentPlan:
         if self.serve_spec_k:
             lines.append(f"  serve spec k    : {self.serve_spec_k} draft "
                          f"tokens per verify step (draft-then-verify)")
+        if self.serve_slo_ttft_steps or self.serve_slo_e2e_steps:
+            lines.append(f"  serve SLO       : ttft <= "
+                         f"{self.serve_slo_ttft_steps} vsteps, e2e <= "
+                         f"{self.serve_slo_e2e_steps} vsteps "
+                         f"(goodput deadlines, virtual step clock)")
         if self.napkin:
             lines.append("  napkin math:")
             for k, v in self.napkin.items():

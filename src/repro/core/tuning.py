@@ -34,6 +34,28 @@ SERVE_EXPECTED_LEN_FRACTION = 0.25
 # verify step's (k+1)-wide compute, so the tuner keeps spec off
 SPEC_MIN_REPETITIVENESS = 0.35
 SPEC_MAX_K = 8
+# SLO deadlines the tuner suggests, on the virtual step clock: TTFT gets
+# a multiple of the expected prefill stall (queue wait + ingestion both
+# have to fit under it), e2e adds a per-token decode allowance on top
+SERVE_SLO_TTFT_STALL_MULT = 4
+SERVE_SLO_E2E_STEPS_PER_TOKEN = 2
+
+
+def ttft_napkin_steps(prompt_len: int, chunk_unit: int,
+                      backlog_chunks: int = 0,
+                      waited_steps: int = 0) -> int:
+    """Predicted time-to-first-token, in virtual steps — the napkin the
+    router's SLO admission consults before queueing a request.
+
+    The prediction is the steps already waited, plus the fleet's pending
+    prefill backlog (in chunk-equivalents — the share one replica would
+    have to chew through first), plus the request's own prompt priced at
+    ``ceil(prompt_len / chunk_unit)`` chunk steps.  Chunk-equivalents are
+    the same unit the virtual clock prices blocking prefills in, so the
+    prediction and the measured ``ttft_steps`` are directly comparable.
+    """
+    own = -(-max(int(prompt_len), 1) // max(int(chunk_unit), 1))
+    return int(waited_steps) + int(backlog_chunks) + own
 
 
 def spec_k_for(repetitiveness: float) -> int:
@@ -290,6 +312,24 @@ def tune(cfg: ModelConfig, shape: ShapeConfig, target: TargetSpec,
                 f"x ~{t_tick*1e3:.2f} ms/tick ≈ {stall*t_tick*1e3:.1f} ms "
                 f"to first token; chunked ingest overlaps those ticks "
                 f"with decode, blocking stalls the loop for all of them")
+            # --- SLO deadlines (virtual step clock) ------------------------
+            # The same stall estimate, held to a deadline: TTFT gets a
+            # SERVE_SLO_TTFT_STALL_MULT x headroom over the expected
+            # prefill (queue wait + ingestion must both fit), e2e adds
+            # SERVE_SLO_E2E_STEPS_PER_TOKEN vsteps per expected generated
+            # token on top.  Virtual steps, never wall-clock — the router
+            # judges goodput and rejects hopeless admissions against
+            # these (launch/serve.py --slo-ttft/-e2e -1 = use the plan's).
+            plan.serve_slo_ttft_steps = \
+                SERVE_SLO_TTFT_STALL_MULT * (stall + 1)
+            plan.serve_slo_e2e_steps = plan.serve_slo_ttft_steps + \
+                SERVE_SLO_E2E_STEPS_PER_TOKEN * expected_len
+            plan.napkin["serve_slo"] = (
+                f"ttft <= {plan.serve_slo_ttft_steps} vsteps "
+                f"({SERVE_SLO_TTFT_STALL_MULT}x expected prefill stall), "
+                f"e2e <= {plan.serve_slo_e2e_steps} vsteps "
+                f"(+{SERVE_SLO_E2E_STEPS_PER_TOKEN}/token over "
+                f"{expected_len} expected tokens)")
             # --- shared-prefix KV cache budget -----------------------------
             # The cache pins already-resident page runs (LRU) so repeat
             # prefixes re-prefill nothing; it spends no new HBM — the cap

@@ -77,6 +77,15 @@ def _auto_repetitiveness(spec_k, trace, n, vocab, prefill_len,
     return trace_repetitiveness(preview)
 
 
+def _resolve_slo(slo_ttft: int, slo_e2e: int, plan) -> tuple[int, int]:
+    """-1 = adopt the tuner's napkin deadlines (``plan.serve_slo_*``)."""
+    if slo_ttft < 0:
+        slo_ttft = int(getattr(plan, "serve_slo_ttft_steps", 0))
+    if slo_e2e < 0:
+        slo_e2e = int(getattr(plan, "serve_slo_e2e_steps", 0))
+    return slo_ttft, slo_e2e
+
+
 def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
                prefill_len: int = 64, decode_tokens: int = 16,
                target: str = "local:cpu", seed: int = 0,
@@ -88,7 +97,10 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
                prefill_chunk: int | None = None,
                prefix_cache: bool = False, kv_kernel: str = "auto",
                spec_k: int | None = 0,
-               trace: str = "uniform", log=print) -> dict:
+               trace: str = "uniform", arrivals: str = "closed",
+               arrival_gap: float = 4.0, slo_ttft: int = 0,
+               slo_e2e: int = 0, admission: str = "queue",
+               autoscale: int = 0, log=print) -> dict:
     """Serve `requests` requests (default: one per slot) of `prefill_len`
     prompts, `decode_tokens` generations each.  Reports per-request latency
     and aggregate tokens/sec.  With ``replicas`` > 1 the requests flow
@@ -106,10 +118,36 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
     verify speculative decoding (k draft tokens per slot per verify step;
     0 = off; None = let the tuner pick from the trace's measured
     repetitiveness — pair with ``trace='repetitive'``); token streams
-    are bit-identical with spec on or off."""
+    are bit-identical with spec on or off.
+
+    Open-loop traffic: ``arrivals`` stamps each request with an
+    ``arrival_vstep`` (``poisson``: exponential gaps of mean
+    ``arrival_gap`` virtual steps; ``bursty``: sinusoidally rate-
+    modulated; ``closed``: everything at t=0, the legacy closed loop).
+    ``slo_ttft`` / ``slo_e2e`` are goodput deadlines in VIRTUAL STEPS
+    (0 = off; -1 = use the tuner's ``plan.serve_slo_*`` napkin values).
+    ``admission='reject'`` (router path) sheds load up front: a request
+    whose napkin-predicted TTFT already busts the SLO is rejected with a
+    reason instead of queued.  ``autoscale=N`` (router path) lets the
+    fleet breathe between N and ``replicas`` serving replicas (grow on
+    queue depth / SLO headroom, drain idle replicas to dormant).  Token
+    streams stay bit-identical to the closed-loop replay of the same
+    trace — arrival timing moves latency, never sampling."""
     cfg = get_config(arch)
     if trace not in TRACES:
         raise ValueError(f"trace {trace!r} not in {tuple(TRACES)}")
+    from repro.serving import ADMISSION_MODES, ARRIVAL_MODES
+    if arrivals not in ARRIVAL_MODES:
+        raise ValueError(f"arrivals {arrivals!r} not in {ARRIVAL_MODES}")
+    if admission not in ADMISSION_MODES:
+        raise ValueError(f"admission {admission!r} not in {ADMISSION_MODES}")
+    if replicas == 1 and (admission != "queue" or autoscale):
+        raise NotImplementedError(
+            "--admission reject and --autoscale need the router path "
+            "(--replicas > 1); the single engine always queues")
+    if autoscale and not (1 <= autoscale <= replicas):
+        raise ValueError(
+            f"--autoscale {autoscale} must be in [1, --replicas={replicas}]")
     from repro.serving.engine import SERVABLE_FAMILIES
     if cfg.family not in SERVABLE_FAMILIES:
         if replicas > 1:
@@ -137,6 +175,8 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
             route_policy=route_policy, prefill_chunk=prefill_chunk,
             prefix_cache=prefix_cache, kv_kernel=kv_kernel,
             spec_k=spec_k, repetitiveness=repetitiveness, trace=trace,
+            arrivals=arrivals, arrival_gap=arrival_gap, slo_ttft=slo_ttft,
+            slo_e2e=slo_e2e, admission=admission, autoscale=autoscale,
             log=log)
     engine = ServeEngine(arch=arch, target=target, num_slots=batch,
                          max_len=pool_len, seed=seed, kv_layout=kv_layout,
@@ -148,7 +188,11 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
     reqs = _make_trace(trace, n, cfg.vocab_size, prefill_len,
                        decode_tokens, seed, temperature, top_k, top_p,
                        page_size=engine.page_size)
-    stats = engine.run(reqs, policy=mode)
+    from repro.serving import with_arrivals
+    reqs = with_arrivals(reqs, arrivals, mean_gap=arrival_gap, seed=seed)
+    slo_ttft, slo_e2e = _resolve_slo(slo_ttft, slo_e2e, engine.plan)
+    stats = engine.run(reqs, policy=mode, slo_ttft_steps=slo_ttft,
+                       slo_e2e_steps=slo_e2e)
     for r in stats.results:
         log(f"[serve]   req {r.rid}: {r.prompt_len}+{len(r.tokens)} tokens, "
             f"ttft {r.ttft_s*1e3:.1f}ms, latency {r.latency_s*1e3:.1f}ms")
@@ -176,6 +220,14 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
         "spec_accepted_tokens": stats.spec_accepted_tokens,
         "accepted_per_verify": stats.accepted_per_verify,
         "effective_top_k": stats.effective_top_k,
+        "arrivals": arrivals,
+        "p50_ttft_steps": stats.p50_ttft_steps,
+        "p99_ttft_steps": stats.p99_ttft_steps,
+        "p50_e2e_steps": stats.p50_e2e_steps,
+        "p99_e2e_steps": stats.p99_e2e_steps,
+        "goodput_tokens": stats.goodput_tokens,
+        "slo_ttft_steps": stats.slo_ttft_steps,
+        "slo_e2e_steps": stats.slo_e2e_steps,
         "decode_s": stats.wall_s,
         "decode_tok_per_s": stats.tokens_per_s,
         "latency_mean_s": float(np.mean([r.latency_s for r in stats.results])),
@@ -193,9 +245,11 @@ def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
                        temperature, top_k, top_p, replicas, route_policy,
                        prefill_chunk=None, prefix_cache=False,
                        kv_kernel="auto", spec_k=0, repetitiveness=0.0,
-                       trace="uniform", log=print) -> dict:
+                       trace="uniform", arrivals="closed", arrival_gap=4.0,
+                       slo_ttft=0, slo_e2e=0, admission="queue",
+                       autoscale=0, log=print) -> dict:
     """Multi-replica path: ReplicaRouter over N tuner-split engines."""
-    from repro.serving import ReplicaRouter
+    from repro.serving import AutoscalePolicy, ReplicaRouter, with_arrivals
     cfg = get_config(arch)
     router = ReplicaRouter.build(
         arch=arch, target=target, replicas=replicas, kv_layout=kv_layout,
@@ -207,7 +261,18 @@ def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
     reqs = _make_trace(trace, n, cfg.vocab_size, prefill_len,
                        decode_tokens, seed, temperature, top_k, top_p,
                        page_size=max(e.page_size for e in router.engines))
-    stats = router.run(reqs, policy=mode)
+    reqs = with_arrivals(reqs, arrivals, mean_gap=arrival_gap, seed=seed)
+    slo_ttft, slo_e2e = _resolve_slo(slo_ttft, slo_e2e,
+                                     router.engines[0].plan)
+    policy_obj = (AutoscalePolicy(min_replicas=autoscale,
+                                  max_replicas=replicas)
+                  if autoscale else None)
+    stats = router.run(reqs, policy=mode, slo_ttft_steps=slo_ttft,
+                       slo_e2e_steps=slo_e2e, admission=admission,
+                       autoscale=policy_obj)
+    for rej in stats.rejected:
+        log(f"[serve]   req {rej.rid} REJECTED at v{rej.v_reject}: "
+            f"{rej.reason}")
     for r in stats.results:
         log(f"[serve]   req {r.rid} -> replica "
             f"{stats.replica_of[r.rid]}: {r.prompt_len}+{len(r.tokens)} "
@@ -233,17 +298,24 @@ def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
         "spec_accepted_tokens": stats.spec_accepted_tokens,
         "accepted_per_verify": stats.accepted_per_verify,
         "effective_top_k": stats.effective_top_k,
+        "arrivals": arrivals,
+        "admission": admission,
+        "autoscale": autoscale,
+        "rejected": len(stats.rejected),
+        "metrics": stats.to_metrics(),
         "decode_s": stats.wall_s,
         "decode_tok_per_s": stats.tokens_per_s,
-        "latency_mean_s": float(np.mean([r.latency_s
-                                         for r in stats.results])),
-        "sample": stats.results[0].tokens[:8],
+        "latency_mean_s": (float(np.mean([r.latency_s
+                                          for r in stats.results]))
+                           if stats.results else float("nan")),
+        "sample": stats.results[0].tokens[:8] if stats.results else [],
         "plan": router.engines[0].plan,
     }
     log(f"[serve] {replicas}x{kv_layout}:{route_policy}:{mode}: "
         f"{out['decode_tok_per_s']:.1f} tok/s fleet, peak "
         f"{stats.peak_in_flight} in flight, imbalance "
         f"{stats.imbalance:.2f}")
+    log("[serve] " + stats.summary())
     return out
 
 
@@ -390,6 +462,48 @@ def main(argv=None):
                         "under page pressure before any request is "
                         "preempted; token streams are bit-identical "
                         "with the cache on or off")
+    p.add_argument("--arrivals", choices=("closed", "poisson", "bursty"),
+                   default="closed",
+                   help="open-loop arrival process, stamped in VIRTUAL "
+                        "STEPS (the deterministic jitted-invocation "
+                        "clock, never wall time): 'closed' submits "
+                        "everything at t=0 (legacy closed loop); "
+                        "'poisson' draws exponential inter-arrival gaps "
+                        "of mean --arrival-gap vsteps; 'bursty' "
+                        "sinusoidally rate-modulates the Poisson process "
+                        "(diurnal-style peaks and troughs).  The router "
+                        "admits a request only once the fleet clock "
+                        "reaches its arrival; token streams stay "
+                        "bit-identical to the closed-loop replay")
+    p.add_argument("--arrival-gap", type=float, default=4.0,
+                   help="mean inter-arrival gap in virtual steps "
+                        "(--arrivals poisson/bursty)")
+    p.add_argument("--slo-ttft", type=int, default=0,
+                   help="TTFT goodput deadline in virtual steps: only "
+                        "requests whose first token lands within the "
+                        "deadline count toward goodput_tokens (0 = off, "
+                        "-1 = use the tuner's plan.serve_slo_ttft_steps "
+                        "napkin value)")
+    p.add_argument("--slo-e2e", type=int, default=0,
+                   help="end-to-end goodput deadline in virtual steps "
+                        "(0 = off, -1 = use the tuner's "
+                        "plan.serve_slo_e2e_steps napkin value)")
+    p.add_argument("--admission", choices=("queue", "reject"),
+                   default="queue",
+                   help="router admission control (--replicas > 1): "
+                        "'queue' holds every arrival until a replica "
+                        "frees up; 'reject' sheds load up front — a "
+                        "request whose napkin-predicted TTFT (waited + "
+                        "backlog share + own prefill chunks) already "
+                        "busts --slo-ttft is rejected with a reason "
+                        "instead of queued (needs an SLO)")
+    p.add_argument("--autoscale", type=int, default=0,
+                   help="fleet autoscaling (--replicas > 1): N = minimum "
+                        "serving replicas; the fleet breathes between N "
+                        "and --replicas, growing on queue depth or SLO "
+                        "headroom and draining idle replicas (drain = "
+                        "stop admitting, finish in-flight, park "
+                        "dormant).  0 = off (static fleet)")
     p.add_argument("--temperature", type=float, default=0.0,
                    help="sampling temperature (0 = greedy)")
     p.add_argument("--top-k", type=int, default=0,
@@ -408,7 +522,10 @@ def main(argv=None):
                prefill_chunk=None if a.prefill_chunk < 0
                else a.prefill_chunk,
                prefix_cache=a.prefix_cache, kv_kernel=a.kv_kernel,
-               spec_k=spec_k, trace=a.trace)
+               spec_k=spec_k, trace=a.trace, arrivals=a.arrivals,
+               arrival_gap=a.arrival_gap, slo_ttft=a.slo_ttft,
+               slo_e2e=a.slo_e2e, admission=a.admission,
+               autoscale=a.autoscale)
 
 
 if __name__ == "__main__":

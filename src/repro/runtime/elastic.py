@@ -33,10 +33,26 @@ def reshard_state(state, state_table, new_mesh, rules=None,
         lambda x, s: jax.device_put(x, s), state, specs)
 
 
-def rebalance_batch_size(global_batch: int, old_data: int, new_data: int) -> int:
+def rebalance_batch_size(global_batch: int, old_data: int, new_data: int,
+                         *, allow_shrink: bool = False) -> tuple[int, int]:
     """Keep the global batch; per-replica batch grows on the survivors.
-    Returns the new per-replica batch (must divide evenly)."""
-    if global_batch % new_data:
-        # shrink to the largest divisible global batch (logged by caller)
-        global_batch = (global_batch // new_data) * new_data
-    return global_batch // new_data
+
+    Returns ``(per_replica, adjusted_global)``.  When ``global_batch``
+    does not divide evenly over ``new_data`` replicas the only way to
+    keep per-replica batches equal is to shrink the global batch to the
+    largest divisible value — a silent semantics change for the caller
+    (the optimizer sees smaller steps), so it must be opted into with
+    ``allow_shrink=True``; otherwise this raises ``ValueError``.
+    """
+    if new_data <= 0:
+        raise ValueError(f"new_data must be positive, got {new_data}")
+    adjusted = global_batch
+    if adjusted % new_data:
+        if not allow_shrink:
+            raise ValueError(
+                f"global batch {global_batch} does not divide over "
+                f"{new_data} replicas (was {old_data}); pass "
+                f"allow_shrink=True to shrink to the largest divisible "
+                f"global batch")
+        adjusted = (adjusted // new_data) * new_data
+    return adjusted // new_data, adjusted

@@ -7,29 +7,39 @@ Layered as: KV pool (contiguous ``KVCachePool`` or page-table
 per-request sampling, draft-then-verify speculative decoding) +
 ``ServeEngine`` facade (tuner-sized pools, jitted steps, ``kv_layout``
 selection, ``spec_k``) + ``ReplicaRouter`` (N engines behind one
-admission queue with pluggable routing policies and overflow
-re-routing).
+admission queue with pluggable routing policies, overflow re-routing,
+open-loop arrival release, SLO-aware admission, and ``AutoscalePolicy``
+fleet autoscaling).
 """
 
 from repro.serving.engine import KV_LAYOUTS, SERVABLE_FAMILIES, ServeEngine
 from repro.serving.pool import KVCachePool, PagedKVCachePool, PoolExhausted
 from repro.serving.prefill import PrefillManager
 from repro.serving.prefix_cache import PrefixCache, prefix_key
-from repro.serving.router import (ROUTE_POLICIES, ReplicaRouter, RouterStats,
-                                  prefix_replica)
+from repro.serving.router import (ADMISSION_MODES, ROUTE_POLICIES,
+                                  AutoscaleEvent, AutoscalePolicy,
+                                  RejectedRequest, ReplicaRouter,
+                                  RouterStats, prefix_replica)
 from repro.serving.sampling import K_CAP, effective_top_k, make_sampler
 from repro.serving.scheduler import (Request, RequestResult, Scheduler,
-                                     ServeStats, VirtualClock)
+                                     ServeStats, VirtualClock,
+                                     percentile_steps)
 from repro.serving.spec import Drafter, NGramDrafter
-from repro.serving.trace import (longprompt_trace, repetitive_trace,
-                                 sharedprefix_trace, trace_repetitiveness,
-                                 uniform_trace, zipf_trace)
+from repro.serving.trace import (ARRIVAL_MODES, bursty_arrivals,
+                                 longprompt_trace, poisson_arrivals,
+                                 repetitive_trace, sharedprefix_trace,
+                                 trace_repetitiveness, uniform_trace,
+                                 with_arrivals, zipf_trace)
 
 __all__ = ["ServeEngine", "SERVABLE_FAMILIES", "KV_LAYOUTS", "KVCachePool",
            "PagedKVCachePool", "PoolExhausted", "PrefillManager",
            "PrefixCache", "prefix_key", "ReplicaRouter", "RouterStats",
-           "ROUTE_POLICIES", "prefix_replica", "Request", "RequestResult",
-           "Scheduler", "ServeStats", "VirtualClock", "make_sampler",
+           "ROUTE_POLICIES", "ADMISSION_MODES", "AutoscalePolicy",
+           "AutoscaleEvent", "RejectedRequest", "prefix_replica",
+           "Request", "RequestResult", "Scheduler", "ServeStats",
+           "VirtualClock", "percentile_steps", "make_sampler",
            "K_CAP", "effective_top_k", "Drafter", "NGramDrafter",
-           "longprompt_trace", "repetitive_trace", "sharedprefix_trace",
-           "trace_repetitiveness", "uniform_trace", "zipf_trace"]
+           "ARRIVAL_MODES", "poisson_arrivals", "bursty_arrivals",
+           "with_arrivals", "longprompt_trace", "repetitive_trace",
+           "sharedprefix_trace", "trace_repetitiveness", "uniform_trace",
+           "zipf_trace"]

@@ -301,7 +301,9 @@ class ServeEngine:
     def run(self, requests, policy: str = "continuous",
             prefill_chunk: int | None = None,
             prefix_cache: bool | None = None,
-            spec_k: int | None = None) -> ServeStats:
+            spec_k: int | None = None,
+            slo_ttft_steps: int = 0,
+            slo_e2e_steps: int = 0) -> ServeStats:
         """Drain `requests` under `policy` ('continuous' | 'static').
 
         A fresh pool per run keeps back-to-back policy comparisons honest
@@ -314,6 +316,12 @@ class ServeEngine:
         this run (0 = plain one-token decode) — spec-on and spec-off runs
         also share every jitted step, and their token streams are
         bit-identical by construction.
+        ``slo_ttft_steps`` / ``slo_e2e_steps`` set the virtual-step
+        deadlines ``ServeStats.goodput_tokens`` is judged by (0 = unset;
+        the tuner's suggestions live in ``plan.serve_slo_ttft_steps`` /
+        ``plan.serve_slo_e2e_steps``).  Requests whose ``arrival_vstep``
+        is set are admitted open-loop: only once the virtual clock
+        reaches their arrival.
         """
         chunk = self.prefill_chunk if prefill_chunk is None else prefill_chunk
         k = self.spec_k if spec_k is None else spec_k
@@ -325,7 +333,9 @@ class ServeEngine:
                           prefill_chunk_unit=self.chunk_unit,
                           verify_fn=self.verify_fn if k else None,
                           spec_k=k, drafter=self.drafter,
-                          vocab_size=self.cfg.vocab_size)
+                          vocab_size=self.cfg.vocab_size,
+                          slo_ttft_steps=slo_ttft_steps,
+                          slo_e2e_steps=slo_e2e_steps)
         stats = sched.run(list(requests))
         self.log(f"[serve:{self.kv_layout}:{policy}] {stats.summary()}")
         return stats

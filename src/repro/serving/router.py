@@ -48,6 +48,72 @@ Replica lists may repeat the *same* ``ServeEngine`` object: each run
 builds a fresh pool + scheduler per replica slot, so duplicates share
 jitted steps and weights (one compile) while keeping independent KV
 state — the cheap way to spin up N homogeneous replicas.
+
+**Open-loop traffic.**  Requests carry ``arrival_vstep`` (stamped by
+``serving/trace.poisson_arrivals`` / ``bursty_arrivals``): the router
+releases a request into its admission queue only once the fleet's shared
+virtual step clock reaches the arrival, and an idle fleet with only
+future arrivals fast-forwards the clock to the next one.  Because the
+samplers key on (request id, generation step), admission *timing* never
+changes token streams — an open-loop run is bit-identical to a
+closed-loop replay of the same requests.
+
+**SLO-aware admission** (``admission="reject"`` + ``slo_ttft_steps`` /
+``slo_e2e_steps``): each round, queued fresh requests are held against
+the tuner's TTFT napkin (``core/tuning.ttft_napkin_steps``: steps
+already waited + the accepting replicas' prefill backlog share + the
+request's own chunk cost); one predicted to blow its deadline is
+rejected-with-reason (``RouterStats.rejected``) instead of queued
+forever.  Preempted/rerouted entries already hold tokens and are never
+rejected.  All deadlines are virtual steps — wall-clock never judges an
+SLO.
+
+**Autoscaling** (``autoscale=AutoscalePolicy(...)``): the fleet starts
+at ``min_replicas`` serving replicas (the rest dormant) and, once per
+``cooldown_rounds``, grows one replica when the queue is
+``up_queue_depth`` deep or the queue head's predicted TTFT exceeds
+``slo_headroom`` x the TTFT deadline; after ``drain_idle_rounds`` quiet
+rounds it *drains* the highest-index serving replica — the replica
+stops admitting but keeps stepping until its in-flight requests finish
+(never dropped, never migrated mid-stream), then parks dormant.  Every
+transition resizes the fleet's admission cap through
+``runtime/elastic.rebalance_batch_size`` (the same resize scaffolding
+training elasticity uses) and is recorded as an ``AutoscaleEvent``.
+
+``RouterStats.to_metrics()`` flattens a drain into one flat dict of
+gauge/counter snapshots a dashboard could scrape.  Key schema (all
+values plain numbers; virtual-step gauges are NaN when nothing
+completed — JSON writers map NaN to null):
+
+=============================  =======  ================================
+key                            kind     meaning
+=============================  =======  ================================
+router_requests_completed      counter  requests fully served
+router_requests_rejected       counter  SLO admission rejections
+router_generated_tokens        counter  tokens emitted fleet-wide
+router_goodput_tokens          counter  tokens from requests meeting SLO
+router_slo_ttft_steps          gauge    TTFT deadline judged by (0=unset)
+router_slo_e2e_steps           gauge    e2e deadline judged by (0=unset)
+router_ttft_p50_steps          gauge    median TTFT, virtual steps
+router_ttft_p99_steps          gauge    p99 TTFT, virtual steps
+router_e2e_p50_steps           gauge    median e2e latency, virtual steps
+router_e2e_p99_steps           gauge    p99 e2e latency, virtual steps
+router_mean_ttft_steps         gauge    mean TTFT, virtual steps
+router_total_vsteps            counter  shared clock at drain end
+router_peak_in_flight          gauge    max concurrent requests
+router_peak_replicas           gauge    max replicas serving/draining
+router_reroutes                counter  starvation re-dispatches
+router_autoscale_grows         counter  replicas activated
+router_autoscale_drains        counter  drains initiated
+router_load_imbalance          gauge    max/mean peak resident KV tokens
+router_wall_s                  gauge    wall time (ADVISORY only)
+router_tokens_per_s            gauge    wall throughput (ADVISORY only)
+replica{i}_generated_tokens    counter  per-replica tokens
+replica{i}_decode_steps        counter  per-replica scheduler ticks
+replica{i}_peak_resident_kv    gauge    per-replica peak resident tokens
+replica{i}_preemptions         counter  per-replica page-pressure evicts
+replica{i}_occupancy           gauge    per-replica mean slot occupancy
+=============================  =======  ================================
 """
 
 from __future__ import annotations
@@ -59,13 +125,142 @@ from collections import deque
 
 import numpy as np
 
+from repro.core.tuning import ttft_napkin_steps
+from repro.runtime.elastic import rebalance_batch_size
 from repro.serving.pool import PoolExhausted
 from repro.serving.prefix_cache import prefix_key
 from repro.serving.sampling import K_CAP
 from repro.serving.scheduler import (RoundClock, Scheduler, VirtualClock,
-                                     _Entry)
+                                     _Entry, percentile_steps)
 
 ROUTE_POLICIES = ("round_robin", "least_loaded", "prefix_affinity")
+ADMISSION_MODES = ("queue", "reject")
+
+
+@dataclasses.dataclass
+class RejectedRequest:
+    """An SLO admission rejection — returned instead of silent queueing."""
+    rid: int
+    reason: str
+    v_reject: int                  # shared virtual clock at rejection
+    predicted_ttft_steps: int      # the napkin figure that condemned it
+
+
+@dataclasses.dataclass
+class AutoscaleEvent:
+    """One fleet-size transition, stamped on the shared virtual clock."""
+    vstep: int
+    action: str                    # "grow" | "drain" | "stop"
+    replica: int
+    serving: int                   # actively-admitting replicas after it
+    per_replica_cap: int           # admission cap from rebalance_batch_size
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalePolicy:
+    """Deterministic grow/drain policy for an elastic router fleet."""
+    min_replicas: int = 1
+    max_replicas: int = 0          # 0 = the whole fleet may activate
+    up_queue_depth: int = 2        # queued requests that trigger a grow
+    cooldown_rounds: int = 4       # min rounds between scaling decisions
+    drain_idle_rounds: int = 8     # empty-queue rounds before a drain
+    slo_headroom: float = 0.8      # grow when predicted TTFT > this x SLO
+
+
+class _Autoscaler:
+    """Replica lifecycle (active / draining / dormant) for one drain.
+
+    Grow activates the lowest-index non-active replica (a draining one —
+    still warm — beats a dormant one); drain marks the highest-index
+    active replica: it leaves the accepting set but keeps stepping until
+    its in-flight requests finish in place, then parks dormant.  Every
+    transition re-derives the per-replica admission cap by pushing the
+    fleet's slot budget through ``rebalance_batch_size`` — the same
+    keep-the-global-batch resize semantics training elasticity uses.
+    """
+
+    def __init__(self, pol: AutoscalePolicy, scheds, shared):
+        n = len(scheds)
+        self.max_r = pol.max_replicas or n
+        if not 1 <= pol.min_replicas <= self.max_r <= n:
+            raise ValueError(
+                f"autoscale needs 1 <= min_replicas {pol.min_replicas} <= "
+                f"max_replicas {self.max_r} <= fleet size {n}")
+        self.pol = pol
+        self.scheds = scheds
+        self.shared = shared
+        self.state = ["active" if i < pol.min_replicas else "dormant"
+                      for i in range(n)]
+        self.fleet_slots = sum(s.pool.num_slots for s in scheds)
+        self.events: list[AutoscaleEvent] = []
+        # a fresh fleet may scale immediately; cooldown gates *subsequent*
+        # moves so one burst cannot slam the fleet to max in one round
+        self.rounds_since_scale = pol.cooldown_rounds
+        self.idle_rounds = 0
+        self.per_cap, _ = rebalance_batch_size(
+            self.fleet_slots, n, max(self.serving, 1), allow_shrink=True)
+
+    @property
+    def serving(self) -> int:
+        return sum(1 for st in self.state if st == "active")
+
+    @property
+    def working(self) -> int:
+        """Replicas doing work: admitting or draining (not dormant)."""
+        return sum(1 for st in self.state if st != "dormant")
+
+    def accepting(self) -> list[int]:
+        return [i for i, st in enumerate(self.state) if st == "active"]
+
+    def _scale(self, action: str, idx: int, new_state: str) -> None:
+        old = max(self.serving, 1)
+        self.state[idx] = new_state
+        self.per_cap, _ = rebalance_batch_size(
+            self.fleet_slots, old, max(self.serving, 1), allow_shrink=True)
+        self.events.append(AutoscaleEvent(
+            vstep=self.shared.t, action=action, replica=idx,
+            serving=self.serving, per_replica_cap=self.per_cap))
+        self.rounds_since_scale = 0
+
+    def try_grow(self) -> bool:
+        """Activate one more replica if the cap allows; False at max."""
+        if self.serving >= self.max_r:
+            return False
+        for want in ("draining", "dormant"):
+            for i, st in enumerate(self.state):
+                if st == want:
+                    self._scale("grow", i, "active")
+                    return True
+        return False
+
+    def tick(self, queue_depth: int, predicted_ttft: int | None,
+             slo_ttft_steps: int) -> None:
+        """One per-round scaling decision (after dispatch, so the depth
+        seen is what the current fleet genuinely could not place)."""
+        self.rounds_since_scale += 1
+        self.idle_rounds = 0 if queue_depth else self.idle_rounds + 1
+        for i, st in enumerate(self.state):
+            if st == "draining" and not self.scheds[i].has_work:
+                # drained dry: park it (cooldown untouched — finishing a
+                # drain is completion, not a new decision)
+                self.state[i] = "dormant"
+                self.events.append(AutoscaleEvent(
+                    vstep=self.shared.t, action="stop", replica=i,
+                    serving=self.serving, per_replica_cap=self.per_cap))
+        if self.rounds_since_scale < self.pol.cooldown_rounds:
+            return
+        if queue_depth:
+            overloaded = queue_depth >= self.pol.up_queue_depth or (
+                slo_ttft_steps > 0 and predicted_ttft is not None and
+                predicted_ttft > self.pol.slo_headroom * slo_ttft_steps)
+            if overloaded:
+                self.try_grow()
+            return
+        if self.idle_rounds >= self.pol.drain_idle_rounds and \
+                self.serving > self.pol.min_replicas:
+            idx = max(i for i, st in enumerate(self.state)
+                      if st == "active")
+            self._scale("drain", idx, "draining")
 
 
 def prefix_replica(prompt, n_replicas: int, prefix_len: int = 8) -> int:
@@ -92,13 +287,25 @@ def _affinity_score(key: bytes, replica: int) -> int:
 
 @dataclasses.dataclass
 class RouterStats:
-    """Fleet-level drain statistics plus the per-replica breakdown."""
+    """Fleet-level drain statistics plus the per-replica breakdown.
+
+    Latency percentiles, goodput, and every SLO judgement are derived
+    from the shared **virtual step clock** only; ``wall_s`` and
+    ``tokens_per_s`` are advisory wall-clock figures a regression gate
+    must never enforce."""
     results: list                  # merged RequestResults, sorted by rid
     replica_stats: list            # per-replica ServeStats
     replica_of: dict               # rid -> index of the completing replica
     wall_s: float
     reroutes: int = 0              # starvation evictions re-dispatched
     peak_in_flight: int = 0        # max concurrent requests, fleet-wide
+    rejected: list = dataclasses.field(default_factory=list)
+    #                                SLO admission RejectedRequests
+    autoscale_events: list = dataclasses.field(default_factory=list)
+    peak_replicas: int = 0         # max replicas serving or draining
+    total_vsteps: int = 0          # shared virtual clock at drain end
+    slo_ttft_steps: int = 0        # deadlines goodput was judged by
+    slo_e2e_steps: int = 0         #   (0 = unset: every completion counts)
 
     @property
     def generated_tokens(self) -> int:
@@ -107,6 +314,75 @@ class RouterStats:
     @property
     def tokens_per_s(self) -> float:
         return self.generated_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def p50_ttft_steps(self) -> float:
+        return percentile_steps(
+            [r.ttft_steps for r in self.results if r.v_first >= 0], 50)
+
+    @property
+    def p99_ttft_steps(self) -> float:
+        return percentile_steps(
+            [r.ttft_steps for r in self.results if r.v_first >= 0], 99)
+
+    @property
+    def p50_e2e_steps(self) -> float:
+        return percentile_steps(
+            [r.e2e_steps for r in self.results if r.v_done >= 0], 50)
+
+    @property
+    def p99_e2e_steps(self) -> float:
+        return percentile_steps(
+            [r.e2e_steps for r in self.results if r.v_done >= 0], 99)
+
+    @property
+    def goodput_tokens(self) -> int:
+        """Tokens from requests that met the virtual-step deadlines —
+        the figure an SLO-bound deployment actually gets paid for."""
+        return sum(len(r.tokens) for r in self.results
+                   if r.meets_slo(self.slo_ttft_steps, self.slo_e2e_steps))
+
+    @property
+    def autoscale_grows(self) -> int:
+        return sum(1 for e in self.autoscale_events if e.action == "grow")
+
+    @property
+    def autoscale_drains(self) -> int:
+        return sum(1 for e in self.autoscale_events if e.action == "drain")
+
+    def to_metrics(self) -> dict:
+        """Flat gauge/counter snapshot (see the module docstring for the
+        key schema) — plain numbers only, ready for a metrics scrape."""
+        m = {
+            "router_requests_completed": len(self.results),
+            "router_requests_rejected": len(self.rejected),
+            "router_generated_tokens": self.generated_tokens,
+            "router_goodput_tokens": self.goodput_tokens,
+            "router_slo_ttft_steps": self.slo_ttft_steps,
+            "router_slo_e2e_steps": self.slo_e2e_steps,
+            "router_ttft_p50_steps": self.p50_ttft_steps,
+            "router_ttft_p99_steps": self.p99_ttft_steps,
+            "router_e2e_p50_steps": self.p50_e2e_steps,
+            "router_e2e_p99_steps": self.p99_e2e_steps,
+            "router_mean_ttft_steps": self.mean_ttft_steps,
+            "router_total_vsteps": self.total_vsteps,
+            "router_peak_in_flight": self.peak_in_flight,
+            "router_peak_replicas": self.peak_replicas,
+            "router_reroutes": self.reroutes,
+            "router_autoscale_grows": self.autoscale_grows,
+            "router_autoscale_drains": self.autoscale_drains,
+            "router_load_imbalance": self.imbalance,
+            # wall-clock figures are ADVISORY — never gate on them
+            "router_wall_s": self.wall_s,
+            "router_tokens_per_s": self.tokens_per_s,
+        }
+        for i, s in enumerate(self.replica_stats):
+            m[f"replica{i}_generated_tokens"] = s.generated_tokens
+            m[f"replica{i}_decode_steps"] = s.decode_steps
+            m[f"replica{i}_peak_resident_kv"] = s.peak_resident_tokens
+            m[f"replica{i}_preemptions"] = s.preemptions
+            m[f"replica{i}_occupancy"] = s.occupancy
+        return m
 
     @property
     def imbalance(self) -> float:
@@ -195,6 +471,15 @@ class RouterStats:
         per = ", ".join(f"r{i}:{s.generated_tokens}t"
                         for i, s in enumerate(self.replica_stats))
         re = f", {self.reroutes} reroutes" if self.reroutes else ""
+        if self.rejected:
+            re += f", {len(self.rejected)} SLO-rejected"
+        if self.autoscale_events:
+            re += (f", autoscale {self.autoscale_grows} grows/"
+                   f"{self.autoscale_drains} drains "
+                   f"(peak {self.peak_replicas} replicas)")
+        if self.slo_ttft_steps or self.slo_e2e_steps:
+            re += (f", goodput {self.goodput_tokens}t under SLO "
+                   f"(p99 ttft {self.p99_ttft_steps:.0f} vsteps)")
         if self.prefix_hits:
             re += (f", {self.prefix_hits} prefix hits "
                    f"({self.prefill_tokens_saved}t prefill saved)")
@@ -354,10 +639,12 @@ class ReplicaRouter:
                        sched.pool.max_len)
         return sched.worst_resident(entry)
 
-    def _dispatch(self, queue: deque, scheds, accepting) -> bool:
+    def _dispatch(self, queue: deque, scheds, accepting,
+                  cap: int | None = None) -> bool:
         """Admit from the queue head while some accepting replica has room
-        (head-of-line, like the single-engine scheduler).  Returns whether
-        anything was admitted."""
+        (head-of-line, like the single-engine scheduler).  ``cap`` is the
+        autoscaler's per-replica in-flight admission cap (from
+        ``rebalance_batch_size``).  Returns whether anything was admitted."""
         progressed = False
         while queue:
             entry = queue[0]
@@ -370,7 +657,9 @@ class ReplicaRouter:
                 raise PoolExhausted(
                     f"request {entry.req.rid} ({entry.pending_len} resident "
                     f"tokens) can no longer fit any replica's pool")
-            ready = [i for i in feasible if scheds[i].can_admit(entry)]
+            ready = [i for i in feasible
+                     if (cap is None or scheds[i].in_flight < cap)
+                     and scheds[i].can_admit(entry)]
             if not ready:
                 return progressed
             idx = self._pick(entry, ready, scheds)
@@ -380,10 +669,66 @@ class ReplicaRouter:
             progressed = True
         return progressed
 
+    # -- SLO admission --------------------------------------------------------
+    def _napkin(self, entry, scheds, accepting, shared,
+                ahead_chunks: int = 0) -> int:
+        """Predicted TTFT (virtual steps) for a queued entry: waited so
+        far + the accepting replicas' prefill-backlog share + its own
+        chunk cost — the tuner's napkin, fed live fleet state."""
+        unit = max(min(scheds[i].chunk_unit for i in accepting), 1)
+        backlog = sum(-(-scheds[i].prefill_backlog_tokens // unit)
+                      for i in accepting)
+        waited = max(shared.t - getattr(entry.req, "arrival_vstep", 0), 0)
+        share = -(-(backlog + ahead_chunks) // len(accepting))
+        return ttft_napkin_steps(entry.pending_len, unit,
+                                 backlog_chunks=share, waited_steps=waited)
+
+    def _reject_slo(self, queue: deque, scheds, accepting, shared,
+                    rejected: list, slo_ttft_steps: int,
+                    slo_e2e_steps: int) -> None:
+        """Reject-with-reason every queued FRESH request whose predicted
+        TTFT/e2e blows its deadline (preempted or rerouted entries
+        already emitted tokens — those are never rejected; they resume).
+        The napkin charges each entry the queue ahead of it, so one
+        hopeless deep queue rejects its tail, not just its head."""
+        if not accepting:
+            return
+        unit = max(min(scheds[i].chunk_unit for i in accepting), 1)
+        kept: list = []
+        ahead = 0                     # chunk-equivalents queued ahead
+        while queue:
+            en = queue.popleft()
+            if en.st is not None or en.rerouted:
+                kept.append(en)
+                ahead += -(-en.pending_len // unit)
+                continue
+            predicted = self._napkin(en, scheds, accepting, shared,
+                                     ahead_chunks=ahead)
+            reason = None
+            if slo_ttft_steps > 0 and predicted > slo_ttft_steps:
+                reason = (f"predicted TTFT {predicted} vsteps > slo_ttft "
+                          f"{slo_ttft_steps}")
+            elif slo_e2e_steps > 0 and \
+                    predicted + en.remaining_new() > slo_e2e_steps:
+                reason = (f"predicted e2e "
+                          f"{predicted + en.remaining_new()} vsteps > "
+                          f"slo_e2e {slo_e2e_steps}")
+            if reason is None:
+                kept.append(en)
+                ahead += -(-en.pending_len // unit)
+            else:
+                rejected.append(RejectedRequest(
+                    rid=en.req.rid, reason=reason, v_reject=shared.t,
+                    predicted_ttft_steps=predicted))
+        queue.extend(kept)
+
     # -- main loop -----------------------------------------------------------
     def run(self, requests, policy: str = "continuous",
             prefill_chunk: int | None = None,
-            prefix_cache: bool | None = None) -> RouterStats:
+            prefix_cache: bool | None = None,
+            slo_ttft_steps: int = 0, slo_e2e_steps: int = 0,
+            admission: str = "queue",
+            autoscale: AutoscalePolicy | None = None) -> RouterStats:
         """Drain `requests` across the fleet under scheduling `policy`
         (``continuous`` refills replicas between steps; ``static`` gang-
         fills only idle replicas).  Fresh pools per run, like the engine.
@@ -403,8 +748,30 @@ class ReplicaRouter:
         driver thread, stalling every replica), while each round's
         parallel work advances it by the busiest replica's invocation
         count — replicas are independent hosts, so a round costs the max,
-        not the sum."""
+        not the sum.
+
+        Open loop: requests with ``arrival_vstep > 0`` join the router
+        queue only once the shared clock reaches their arrival.
+        ``slo_ttft_steps`` / ``slo_e2e_steps`` set the virtual-step
+        deadlines goodput is judged by; with ``admission="reject"`` a
+        queued request predicted (TTFT napkin) to blow them is rejected
+        with a reason instead of waiting forever.  ``autoscale`` hands
+        replica lifecycle to an ``AutoscalePolicy`` (grow on queue
+        depth / SLO headroom, drain when quiet) — continuous policy
+        only, since a draining replica must keep stepping while closed
+        to admission."""
         requests = list(requests)
+        if admission not in ADMISSION_MODES:
+            raise ValueError(
+                f"admission {admission!r} not in {ADMISSION_MODES}")
+        if admission == "reject" and not (slo_ttft_steps or slo_e2e_steps):
+            raise ValueError(
+                "admission='reject' needs slo_ttft_steps or slo_e2e_steps "
+                "— with no deadline there is nothing to reject against")
+        if autoscale is not None and policy != "continuous":
+            raise ValueError(
+                "autoscale requires the continuous scheduling policy (a "
+                "draining replica keeps stepping while closed to admission)")
         shared = VirtualClock()
         scheds = [Scheduler(e.make_pool(prefix_cache=(
                                 prefix_cache if e.kv_layout == "paged"
@@ -422,7 +789,9 @@ class ReplicaRouter:
                             spec_k=getattr(e, "spec_k", 0),
                             drafter=getattr(e, "drafter", None),
                             vocab_size=e.cfg.vocab_size,
-                            vclock=RoundClock(shared))
+                            vclock=RoundClock(shared),
+                            slo_ttft_steps=slo_ttft_steps,
+                            slo_e2e_steps=slo_e2e_steps)
                   for e in self.engines]
         self._validate(requests, scheds)
         all_greedy = all(r.temperature <= 0 or r.top_k == 1
@@ -433,18 +802,51 @@ class ReplicaRouter:
             s.reset(t0)
         for r in requests:
             r._t_submit = t0
-        queue: deque = deque(_Entry(r) for r in requests)
+        auto = None if autoscale is None else \
+            _Autoscaler(autoscale, scheds, shared)
+        # open loop: stable arrival sort — ties (and the all-zero closed
+        # loop) keep trace order, so closed-loop behaviour is unchanged
+        pending: deque = deque(sorted(
+            (_Entry(r) for r in requests),
+            key=lambda en: getattr(en.req, "arrival_vstep", 0)))
+        queue: deque = deque()
+        rejected: list = []
         self._rr = 0
         reroutes = 0
         peak_in_flight = 0
-        while queue or any(s.active or s.prefill_backlog for s in scheds):
-            if policy == "continuous":
+        peak_replicas = auto.working if auto else len(scheds)
+        while pending or queue or \
+                any(s.active or s.prefill_backlog for s in scheds):
+            # release every request whose arrival the clock has reached
+            while pending and \
+                    getattr(pending[0].req, "arrival_vstep", 0) <= shared.t:
+                queue.append(pending.popleft())
+            if auto is not None:
+                accepting = auto.accepting()
+                if policy == "static":      # unreachable (validated above)
+                    accepting = [i for i in accepting
+                                 if not (scheds[i].active or
+                                         scheds[i].prefill_backlog)]
+            elif policy == "continuous":
                 accepting = list(range(len(scheds)))
             else:      # static: gang-fill only replicas idle at phase start
                 # (mid-prefill counts as busy — its gang is still forming)
                 accepting = [i for i, s in enumerate(scheds)
                              if not (s.active or s.prefill_backlog)]
-            progressed = self._dispatch(queue, scheds, accepting)
+            if admission == "reject" and queue:
+                self._reject_slo(queue, scheds, accepting, shared,
+                                 rejected, slo_ttft_steps, slo_e2e_steps)
+            progressed = self._dispatch(
+                queue, scheds, accepting,
+                cap=auto.per_cap if auto is not None else None)
+            if auto is not None:
+                # scale on the leftover depth: what dispatch could not
+                # place with the current fleet is the genuine pressure
+                head_pred = self._napkin(queue[0], scheds, auto.accepting(),
+                                         shared) \
+                    if queue and auto.accepting() else None
+                auto.tick(len(queue), head_pred, slo_ttft_steps)
+                peak_replicas = max(peak_replicas, auto.working)
             in_flight = sum(s.in_flight for s in scheds)
             peak_in_flight = max(peak_in_flight, in_flight)
             stepped = False
@@ -452,6 +854,8 @@ class ReplicaRouter:
                 # a replica mid-prefill still takes its tick: it ingests
                 # the next chunk AND decodes its active slots — prompt
                 # ingestion on one replica no longer stalls the others
+                # (draining replicas keep stepping here too: closed to
+                # admission, never to completion)
                 if not (s.active or s.prefill_backlog):
                     continue
                 stepped = True
@@ -469,11 +873,22 @@ class ReplicaRouter:
             # the round costs what the busiest replica did this round
             shared.advance(max((s.vclock.take() for s in scheds), default=0))
             if not stepped and not progressed:
-                en = queue[0]
-                raise PoolExhausted(
-                    f"request {en.req.rid} ({en.pending_len} tokens) cannot "
-                    f"be admitted into an otherwise idle fleet — every "
-                    f"replica's pool is too small for it")
+                if queue:
+                    # an autoscaled fleet may just be scaled-in too far:
+                    # wake a replica before declaring the fleet too small
+                    if auto is not None and auto.try_grow():
+                        continue
+                    en = queue[0]
+                    raise PoolExhausted(
+                        f"request {en.req.rid} ({en.pending_len} tokens) "
+                        f"cannot be admitted into an otherwise idle fleet "
+                        f"— every replica's pool is too small for it")
+                if pending:
+                    # idle fleet, future arrivals only: fast-forward the
+                    # shared clock to the next arrival (real time passes
+                    # while nothing computes — deterministically)
+                    nxt = getattr(pending[0].req, "arrival_vstep", 0)
+                    shared.advance(nxt - shared.t)
 
         wall = self.clock() - t0
         stats = [s.stats() for s in scheds]
@@ -483,6 +898,12 @@ class ReplicaRouter:
                          key=lambda r: r.rid)
         out = RouterStats(results=results, replica_stats=stats,
                           replica_of=replica_of, wall_s=wall,
-                          reroutes=reroutes, peak_in_flight=peak_in_flight)
+                          reroutes=reroutes, peak_in_flight=peak_in_flight,
+                          rejected=rejected,
+                          autoscale_events=auto.events if auto else [],
+                          peak_replicas=peak_replicas,
+                          total_vsteps=shared.t,
+                          slo_ttft_steps=slo_ttft_steps,
+                          slo_e2e_steps=slo_e2e_steps)
         self.log(f"[route:{self.policy}:{policy}] {out.summary()}")
         return out

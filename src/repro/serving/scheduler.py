@@ -86,6 +86,14 @@ from repro.serving.sampling import K_CAP, effective_top_k
 from repro.serving.spec import NGramDrafter
 
 
+def percentile_steps(values, q: float) -> float:
+    """np.percentile over virtual-step samples; NaN for an idle fleet
+    (no completed requests) — JSON writers map it to null."""
+    if not values:
+        return float("nan")
+    return float(np.percentile(np.asarray(values, np.float64), q))
+
+
 class VirtualClock:
     """Deterministic step-count clock for the TTFT proxy: one unit per
     jitted model invocation.  ``advance_serial`` marks driver-thread work
@@ -144,6 +152,8 @@ class Request:
     temperature: float = 0.0      # 0 = greedy
     top_k: int = 0                # 0 = no top-k filter
     top_p: float = 1.0            # 1 = no nucleus filter
+    arrival_vstep: int = 0        # open-loop arrival on the virtual step
+    #                               clock; 0 = available at t=0 (closed loop)
 
 
 @dataclasses.dataclass
@@ -177,6 +187,23 @@ class RequestResult:
         for a fixed trace/fleet/policy, unlike wall-clock ttft_s."""
         return self.v_first - self.v_submit
 
+    @property
+    def e2e_steps(self) -> int:
+        """Arrival-to-last-token latency on the virtual step clock."""
+        return self.v_done - self.v_submit
+
+    def meets_slo(self, slo_ttft_steps: int = 0,
+                  slo_e2e_steps: int = 0) -> bool:
+        """Did this request meet its deadlines?  Judged ONLY on virtual
+        steps (never wall-clock); an unset deadline (<= 0) always passes."""
+        if self.v_first < 0 or self.v_done < 0:
+            return False
+        if slo_ttft_steps > 0 and self.ttft_steps > slo_ttft_steps:
+            return False
+        if slo_e2e_steps > 0 and self.e2e_steps > slo_e2e_steps:
+            return False
+        return True
+
 
 @dataclasses.dataclass
 class ServeStats:
@@ -195,6 +222,18 @@ class ServeStats:
     prefill_queue_peak: int = 0   # max requests mid-prefill at once
     overlap_steps: int = 0        # steps that both chunked AND decoded
     mean_ttft_steps: float = 0.0  # mean virtual-clock time to first token
+    # latency distribution + goodput, all on the virtual step clock (the
+    # deterministic proxy) — never derived from wall_s.  Percentiles are
+    # NaN when nothing completed (idle fleet); goodput counts the tokens
+    # of requests that met the TTFT/e2e deadlines (deadline 0 = unset,
+    # every completed request passes it)
+    p50_ttft_steps: float = float("nan")
+    p99_ttft_steps: float = float("nan")
+    p50_e2e_steps: float = float("nan")
+    p99_e2e_steps: float = float("nan")
+    goodput_tokens: int = 0
+    slo_ttft_steps: int = 0       # the deadlines goodput was judged by
+    slo_e2e_steps: int = 0
     # shared-prefix KV cache observability (zeros with the cache off)
     prefix_hits: int = 0          # admissions that reused a cached run
     prefix_misses: int = 0        # admissions with no cached prefix
@@ -298,7 +337,8 @@ class Scheduler:
                  chunk_step_fn=None, prefill_chunk: int = 0,
                  prefill_chunk_unit: int = 16, vclock=None,
                  verify_fn=None, spec_k: int = 0, drafter=None,
-                 vocab_size: int | None = None):
+                 vocab_size: int | None = None,
+                 slo_ttft_steps: int = 0, slo_e2e_steps: int = 0):
         if policy not in ("continuous", "static"):
             raise ValueError(policy)
         if prefill_chunk < 0 or prefill_chunk_unit < 1:
@@ -330,6 +370,9 @@ class Scheduler:
         self.drafter = drafter if drafter is not None else \
             (NGramDrafter() if spec_k else None)
         self.vocab_size = vocab_size        # for effective-top-k reporting
+        # deadlines (virtual steps) goodput is judged by; 0 = unset
+        self.slo_ttft_steps = int(slo_ttft_steps)
+        self.slo_e2e_steps = int(slo_e2e_steps)
         self.all_greedy = False
         self.reset()
 
@@ -374,6 +417,12 @@ class Scheduler:
         return len(self.active) + jobs
 
     @property
+    def prefill_backlog_tokens(self) -> int:
+        """Prompt tokens queued for ingestion but not yet chunked through
+        — the backlog the router's TTFT napkin charges new arrivals."""
+        return self._mgr.pending_tokens if self._mgr is not None else 0
+
+    @property
     def free_tokens(self) -> int:
         """Router load signal: the pool's admittable tokens minus the
         prefill backlog still owed to it.  A replica mid-ingest has the
@@ -404,6 +453,10 @@ class Scheduler:
             if not 0.0 < top_p <= 1.0:
                 raise ValueError(
                     f"request {req.rid}: top_p {top_p} not in (0, 1]")
+            if getattr(req, "arrival_vstep", 0) < 0:
+                raise ValueError(
+                    f"request {req.rid}: arrival_vstep "
+                    f"{req.arrival_vstep} < 0")
             worst = self.worst_resident(_Entry(req))
             if not self.pool.can_ever_serve(worst):
                 raise PoolExhausted(
@@ -517,7 +570,10 @@ class Scheduler:
             st = RequestResult(
                 rid=req.rid, prompt_len=s,
                 max_new_tokens=min(req.max_new_tokens, budget),
-                t_submit=getattr(req, "_t_submit", now), v_submit=self._v0)
+                t_submit=getattr(req, "_t_submit", now),
+                # open loop: latency is measured from the request's
+                # *arrival* on the virtual clock, so queue wait counts
+                v_submit=self._v0 + getattr(req, "arrival_vstep", 0))
             st.t_admit = now
             prompt = entry.pending_tokens()
         else:                                    # resume after preemption
@@ -794,6 +850,10 @@ class Scheduler:
         wall = self.clock() - self._t0
         done = sorted(self.done, key=lambda r: r.rid)
         ttfts = [r.ttft_steps for r in done if r.v_first >= 0]
+        e2es = [r.e2e_steps for r in done if r.v_done >= 0]
+        goodput = sum(
+            len(r.tokens) for r in done
+            if r.meets_slo(self.slo_ttft_steps, self.slo_e2e_steps))
         mgr = self._mgr
         pc = getattr(self.pool, "prefix_cache", None)
         return ServeStats(
@@ -808,6 +868,13 @@ class Scheduler:
             prefill_queue_peak=mgr.queue_peak if mgr else 0,
             overlap_steps=self._overlap,
             mean_ttft_steps=float(np.mean(ttfts)) if ttfts else 0.0,
+            p50_ttft_steps=percentile_steps(ttfts, 50),
+            p99_ttft_steps=percentile_steps(ttfts, 99),
+            p50_e2e_steps=percentile_steps(e2es, 50),
+            p99_e2e_steps=percentile_steps(e2es, 99),
+            goodput_tokens=goodput,
+            slo_ttft_steps=self.slo_ttft_steps,
+            slo_e2e_steps=self.slo_e2e_steps,
             prefix_hits=pc.hits if pc else 0,
             prefix_misses=pc.misses if pc else 0,
             prefill_tokens_saved=pc.tokens_saved if pc else 0,
@@ -819,6 +886,12 @@ class Scheduler:
 
     # -- main loop ---------------------------------------------------------
     def run(self, requests) -> ServeStats:
+        """Drain a trace.  Closed-loop traces (every ``arrival_vstep``
+        0) queue everything up front, exactly the old behaviour.  Open-
+        loop traces release each request only once the virtual clock
+        reaches its arrival; an idle pool with only future arrivals
+        fast-forwards the clock to the next one (real time passes while
+        nothing computes), so the schedule stays deterministic."""
         requests = list(requests)
         self.validate(requests)
         # all-greedy traces skip the sampler (argmax is its temperature-0 /
@@ -826,10 +899,16 @@ class Scheduler:
         self.all_greedy = all(r.temperature <= 0 or r.top_k == 1
                               for r in requests)
         self.reset()
+        # stable sort: ties (and the all-zero closed loop) keep trace order
+        pending = deque(sorted((_Entry(r) for r in requests),
+                        key=lambda en: getattr(en.req, "arrival_vstep", 0)))
         for r in requests:
             r._t_submit = self._t0
-            self.queue.append(_Entry(r))
-        while self.has_work:
+        while pending or self.has_work:
+            while pending and self._v0 + \
+                    getattr(pending[0].req, "arrival_vstep", 0) \
+                    <= self.vclock.t:
+                self.queue.append(pending.popleft())
             if self.policy == "continuous" or \
                     not (self.active or self.prefill_backlog):
                 self.admit_from_queue()
@@ -840,6 +919,9 @@ class Scheduler:
                         f"request {en.req.rid} ({en.pending_len} tokens) "
                         f"cannot be admitted into an otherwise idle pool — "
                         f"the KV pool is too small for it")
+                if pending:
+                    nxt = self._v0 + pending[0].req.arrival_vstep
+                    self.vclock.advance(nxt - self.vclock.t)
                 continue
             self.step()
         return self.stats()

@@ -16,6 +16,13 @@ auto`` feeds the tuner's ``plan.serve_spec_k`` pick.
 
 All traces take per-request sampling knobs (``temperature`` / ``top_k``
 / ``top_p``) and are deterministic for a fixed seed.
+
+Traces are *closed-loop* by default (every request available at t=0,
+``arrival_vstep == 0``).  ``poisson_arrivals`` / ``bursty_arrivals`` /
+``with_arrivals`` stamp open-loop arrival times **on the virtual step
+clock** — arrivals, like every latency metric in this stack, are
+measured in deterministic virtual steps, never wall-clock — so the same
+trace + seed always yields the same arrival schedule.
 """
 
 from __future__ import annotations
@@ -154,6 +161,62 @@ def repetitive_trace(n: int, vocab_size: int, *, prompt_len: int = 8,
     return reqs
 
 
+ARRIVAL_MODES = ("closed", "poisson", "bursty")
+
+
+def poisson_arrivals(requests, *, mean_gap: float = 4.0,
+                     seed: int = 0) -> list[Request]:
+    """Stamp ``arrival_vstep`` with a Poisson arrival process.
+
+    Inter-arrival gaps are exponential with mean ``mean_gap`` virtual
+    steps; arrivals are the floored cumulative sum, so the first request
+    can land at vstep 0 and ties are possible (a burst admitted in one
+    round).  Mutates and returns ``requests`` in trace order.
+    """
+    rng = np.random.RandomState(seed)
+    t = 0.0
+    for req in requests:
+        t += float(rng.exponential(mean_gap))
+        req.arrival_vstep = int(t)
+    return requests
+
+
+def bursty_arrivals(requests, *, mean_gap: float = 4.0, burst: float = 4.0,
+                    period: float = 64.0, seed: int = 0) -> list[Request]:
+    """Stamp ``arrival_vstep`` with a diurnally modulated Poisson process.
+
+    The instantaneous rate swings sinusoidally with ``period`` (vsteps):
+    at the peak the mean gap is ``mean_gap / burst`` (a rush), at the
+    trough it is ``mean_gap`` (quiet) — the day/night shape production
+    admission has to absorb.  Deterministic for a fixed seed.
+    """
+    if burst < 1.0:
+        raise ValueError(f"burst must be >= 1, got {burst}")
+    rng = np.random.RandomState(seed)
+    t = 0.0
+    for req in requests:
+        phase = 0.5 * (1.0 + np.sin(2.0 * np.pi * t / period))
+        local_gap = mean_gap / (1.0 + (burst - 1.0) * phase)
+        t += float(rng.exponential(local_gap))
+        req.arrival_vstep = int(t)
+    return requests
+
+
+def with_arrivals(requests, mode: str = "closed", *, mean_gap: float = 4.0,
+                  seed: int = 0, **kw) -> list[Request]:
+    """Dispatch on ``mode`` in ``ARRIVAL_MODES``; ``closed`` zeroes stamps."""
+    if mode == "closed":
+        for req in requests:
+            req.arrival_vstep = 0
+        return requests
+    if mode == "poisson":
+        return poisson_arrivals(requests, mean_gap=mean_gap, seed=seed, **kw)
+    if mode == "bursty":
+        return bursty_arrivals(requests, mean_gap=mean_gap, seed=seed, **kw)
+    raise ValueError(f"unknown arrival mode {mode!r}; "
+                     f"choose from {ARRIVAL_MODES}")
+
+
 def trace_repetitiveness(requests, max_n: int = 3) -> float:
     """Mean n-gram self-overlap of a trace's prompts, in [0, 1].
 
@@ -170,8 +233,11 @@ def trace_repetitiveness(requests, max_n: int = 3) -> float:
         p = [int(t) for t in np.asarray(req.prompt)]
         for i in range(max_n, len(p)):
             gram = p[i - max_n + 1:i + 1]
+            # every earlier start, including the window ending at i-1
+            # (j = i - max_n); excluding it undercounts short-period
+            # cycles and the tuner picks too-small serve_spec_k
             found = any(p[j:j + max_n] == gram
-                        for j in range(i - max_n))
+                        for j in range(i - max_n + 1))
             hits += bool(found)
             total += 1
     return hits / total if total else 0.0

@@ -112,5 +112,9 @@ def test_elastic_reshard_cpu():
     """Mesh-agnostic checkpoint restores onto a different (1-dev) mesh."""
     from repro.models.params import partition_specs
     from repro.runtime.elastic import rebalance_batch_size
-    assert rebalance_batch_size(256, 16, 15) == 17  # 255 tokens of 256 kept
-    assert rebalance_batch_size(256, 16, 8) == 32
+    import pytest
+    # non-dividing survivor count shrinks the global batch only on opt-in
+    with pytest.raises(ValueError):
+        rebalance_batch_size(256, 16, 15)
+    assert rebalance_batch_size(256, 16, 15, allow_shrink=True) == (17, 255)
+    assert rebalance_batch_size(256, 16, 8) == (32, 256)
