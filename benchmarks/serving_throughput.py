@@ -549,6 +549,26 @@ def run_smoke(out_path: str = "BENCH_serving.json",
             "autoscale_drains": m["router_autoscale_drains"],
             "replicas": 1 if stats is ol_fixed else FLEET,
         }
+    # telemetry overhead: the exact paged/continuous drain of the
+    # paged_continuous cell, re-run with a Tracer attached.  Tracing is
+    # pure host-side bookkeeping on the virtual clock, so the gate below
+    # demands EXACT stream and tokens-per-decode-step equality with the
+    # tracing-off run — wall clock stays advisory, like everywhere else.
+    from repro.serving import Tracer
+    tel_tracer = Tracer()
+    tel_stats = single_paged.run(
+        _trace(n_requests, single_paged, max_new=max_new),
+        policy="continuous", prefill_chunk=0, tracer=tel_tracer)
+    cells["telemetry_overhead"] = {
+        "tokens_per_s": round(tel_stats.tokens_per_s, 2),
+        "tokens_per_step": round(
+            tel_stats.generated_tokens / max(tel_stats.decode_steps, 1), 4),
+        "decode_steps": tel_stats.decode_steps,
+        "generated_tokens": tel_stats.generated_tokens,
+        "trace_spans": len(tel_tracer.spans),
+        "ring_events": tel_tracer.total_events,
+        "mean_ttft_steps": round(tel_stats.mean_ttft_steps, 4),
+    }
     out = {"arch": ARCH, "target": tight, "n_requests": n_requests,
            "max_len": MAX_LEN, "trace_seed": TRACE_SEED, "cells": cells}
     pc = cells["paged_continuous"]
@@ -665,6 +685,23 @@ def run_smoke(out_path: str = "BENCH_serving.json",
             raise SystemExit(
                 "SMOKE FAIL: the autoscaler never grew under Poisson "
                 "load — the open-loop cell is not exercising scaling")
+        tel = cells["telemetry_overhead"]
+        if sp_tok(tel_stats) != sp_tok(paged_cont_stats):
+            raise SystemExit(
+                "SMOKE FAIL: telemetry-on token streams differ from the "
+                "tracing-off paged_continuous run — tracing must be "
+                "observationally free")
+        if tel["tokens_per_step"] != pc["tokens_per_step"] or \
+                tel["decode_steps"] != pc["decode_steps"]:
+            raise SystemExit(
+                f"SMOKE FAIL: telemetry-on tokens/step "
+                f"{tel['tokens_per_step']} @ {tel['decode_steps']} steps "
+                f"!= tracing-off {pc['tokens_per_step']} @ "
+                f"{pc['decode_steps']} — tracing moved the schedule")
+        if not tel["trace_spans"]:
+            raise SystemExit(
+                "SMOKE FAIL: the telemetry run recorded no spans — the "
+                "tracer hook is dead")
         if baseline is not None:
             _check_regression(baseline, out, out_path)
     except SystemExit:

@@ -14,7 +14,9 @@ legacy fixed-batch path so `serve --arch xlstm-1.3b-smoke` still works.
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -100,7 +102,9 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
                trace: str = "uniform", arrivals: str = "closed",
                arrival_gap: float = 4.0, slo_ttft: int = 0,
                slo_e2e: int = 0, admission: str = "queue",
-               autoscale: int = 0, log=print) -> dict:
+               autoscale: int = 0, trace_out: str | None = None,
+               metrics_out: str | None = None,
+               prom_out: str | None = None, log=print) -> dict:
     """Serve `requests` requests (default: one per slot) of `prefill_len`
     prompts, `decode_tokens` generations each.  Reports per-request latency
     and aggregate tokens/sec.  With ``replicas`` > 1 the requests flow
@@ -132,7 +136,14 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
     fleet breathe between N and ``replicas`` serving replicas (grow on
     queue depth / SLO headroom, drain idle replicas to dormant).  Token
     streams stay bit-identical to the closed-loop replay of the same
-    trace — arrival timing moves latency, never sampling."""
+    trace — arrival timing moves latency, never sampling.
+
+    Telemetry exports (engine and router paths): ``trace_out`` writes a
+    Chrome-trace/Perfetto JSON timeline of the whole run (one "process"
+    per replica, one "thread" per slot, all timestamps in virtual steps
+    — byte-identical across identical runs); ``metrics_out`` writes the
+    flat ``to_metrics()`` snapshot as JSON (NaN -> null); ``prom_out``
+    writes the same snapshot in Prometheus text exposition format."""
     cfg = get_config(arch)
     if trace not in TRACES:
         raise ValueError(f"trace {trace!r} not in {tuple(TRACES)}")
@@ -150,6 +161,12 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
             f"--autoscale {autoscale} must be in [1, --replicas={replicas}]")
     from repro.serving.engine import SERVABLE_FAMILIES
     if cfg.family not in SERVABLE_FAMILIES:
+        if trace_out or metrics_out or prom_out:
+            raise NotImplementedError(
+                f"--trace-out/--metrics-out/--prom-out need an engine-"
+                f"servable family {SERVABLE_FAMILIES}; {arch} "
+                f"({cfg.family}) is served by the legacy static path, "
+                f"which has no scheduler to trace")
         if replicas > 1:
             raise NotImplementedError(
                 f"--replicas needs an engine-servable family "
@@ -177,7 +194,8 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
             spec_k=spec_k, repetitiveness=repetitiveness, trace=trace,
             arrivals=arrivals, arrival_gap=arrival_gap, slo_ttft=slo_ttft,
             slo_e2e=slo_e2e, admission=admission, autoscale=autoscale,
-            log=log)
+            trace_out=trace_out, metrics_out=metrics_out,
+            prom_out=prom_out, log=log)
     engine = ServeEngine(arch=arch, target=target, num_slots=batch,
                          max_len=pool_len, seed=seed, kv_layout=kv_layout,
                          page_size=page_size, prefill_chunk=prefill_chunk,
@@ -191,8 +209,12 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
     from repro.serving import with_arrivals
     reqs = with_arrivals(reqs, arrivals, mean_gap=arrival_gap, seed=seed)
     slo_ttft, slo_e2e = _resolve_slo(slo_ttft, slo_e2e, engine.plan)
+    tracer = None
+    if trace_out:
+        from repro.serving import Tracer
+        tracer = Tracer()
     stats = engine.run(reqs, policy=mode, slo_ttft_steps=slo_ttft,
-                       slo_e2e_steps=slo_e2e)
+                       slo_e2e_steps=slo_e2e, tracer=tracer)
     for r in stats.results:
         log(f"[serve]   req {r.rid}: {r.prompt_len}+{len(r.tokens)} tokens, "
             f"ttft {r.ttft_s*1e3:.1f}ms, latency {r.latency_s*1e3:.1f}ms")
@@ -228,6 +250,7 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
         "goodput_tokens": stats.goodput_tokens,
         "slo_ttft_steps": stats.slo_ttft_steps,
         "slo_e2e_steps": stats.slo_e2e_steps,
+        "metrics": stats.to_metrics(),
         "decode_s": stats.wall_s,
         "decode_tok_per_s": stats.tokens_per_s,
         "latency_mean_s": float(np.mean([r.latency_s for r in stats.results])),
@@ -237,6 +260,8 @@ def serve_main(arch: str = "deepseek-7b-smoke", batch: int = 4,
     log(f"[serve] {kv_layout}:{mode}: {out['decode_tok_per_s']:.1f} tok/s "
         f"aggregate, occupancy {stats.occupancy:.0%}, "
         f"peak {stats.peak_active} in flight")
+    _write_telemetry(out["metrics"], tracer, trace_out, metrics_out,
+                     prom_out, log)
     return out
 
 
@@ -247,7 +272,8 @@ def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
                        kv_kernel="auto", spec_k=0, repetitiveness=0.0,
                        trace="uniform", arrivals="closed", arrival_gap=4.0,
                        slo_ttft=0, slo_e2e=0, admission="queue",
-                       autoscale=0, log=print) -> dict:
+                       autoscale=0, trace_out=None, metrics_out=None,
+                       prom_out=None, log=print) -> dict:
     """Multi-replica path: ReplicaRouter over N tuner-split engines."""
     from repro.serving import AutoscalePolicy, ReplicaRouter, with_arrivals
     cfg = get_config(arch)
@@ -267,9 +293,13 @@ def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
     policy_obj = (AutoscalePolicy(min_replicas=autoscale,
                                   max_replicas=replicas)
                   if autoscale else None)
+    tracer = None
+    if trace_out:
+        from repro.serving import Tracer
+        tracer = Tracer()
     stats = router.run(reqs, policy=mode, slo_ttft_steps=slo_ttft,
                        slo_e2e_steps=slo_e2e, admission=admission,
-                       autoscale=policy_obj)
+                       autoscale=policy_obj, tracer=tracer)
     for rej in stats.rejected:
         log(f"[serve]   req {rej.rid} REJECTED at v{rej.v_reject}: "
             f"{rej.reason}")
@@ -316,7 +346,38 @@ def _router_serve_main(arch, batch, prefill_len, decode_tokens, target,
         f"{stats.peak_in_flight} in flight, imbalance "
         f"{stats.imbalance:.2f}")
     log("[serve] " + stats.summary())
+    _write_telemetry(out["metrics"], tracer, trace_out, metrics_out,
+                     prom_out, log)
     return out
+
+
+def _write_telemetry(metrics, tracer, trace_out, metrics_out, prom_out,
+                     log=print) -> None:
+    """Write the post-run telemetry exports a flag asked for.
+
+    ``metrics`` is a flat ``to_metrics()`` snapshot (its key prefix
+    picks the schema); the trace file is pure virtual-step data, so two
+    identical runs produce byte-identical files."""
+    if not (trace_out or metrics_out or prom_out):
+        return
+    from repro.serving.telemetry import (ROUTER_SCHEMA, SERVE_SCHEMA,
+                                         json_sanitize, prometheus_text,
+                                         write_chrome_trace)
+    if metrics_out:
+        Path(metrics_out).write_text(
+            json.dumps(json_sanitize(metrics), indent=2, sort_keys=False)
+            + "\n")
+        log(f"[serve] wrote metrics snapshot ({len(metrics)} keys) -> "
+            f"{metrics_out}")
+    if prom_out:
+        schema = SERVE_SCHEMA if any(k.startswith("serve_") for k in metrics) \
+            else ROUTER_SCHEMA
+        Path(prom_out).write_text(prometheus_text(metrics, schema))
+        log(f"[serve] wrote Prometheus exposition -> {prom_out}")
+    if trace_out and tracer is not None:
+        trace = write_chrome_trace(tracer, trace_out)
+        log(f"[serve] wrote Chrome trace ({len(trace['traceEvents'])} "
+            f"events; load in Perfetto / chrome://tracing) -> {trace_out}")
 
 
 def _legacy_serve_main(arch: str, batch: int, prefill_len: int,
@@ -504,6 +565,24 @@ def main(argv=None):
                         "headroom and draining idle replicas (drain = "
                         "stop admitting, finish in-flight, park "
                         "dormant).  0 = off (static fleet)")
+    p.add_argument("--trace-out", default=None,
+                   help="write a Chrome-trace/Perfetto JSON timeline of "
+                        "the run to PATH: one 'process' per replica, one "
+                        "'thread' per slot (tid 0 = the queue lane), "
+                        "spans for every request lifecycle phase "
+                        "(queued, prefill chunks, cache attach, decode, "
+                        "spec verify, preempt/resume) and instants for "
+                        "fleet events (autoscale, rejections, reclaims). "
+                        "All timestamps are virtual steps — identical "
+                        "runs produce byte-identical files.  Load via "
+                        "https://ui.perfetto.dev or chrome://tracing")
+    p.add_argument("--metrics-out", default=None,
+                   help="write the flat to_metrics() snapshot as JSON to "
+                        "PATH after the run (NaN serialized as null); "
+                        "works on the single-engine and router paths")
+    p.add_argument("--prom-out", default=None,
+                   help="write the metrics snapshot in Prometheus text "
+                        "exposition format to PATH after the run")
     p.add_argument("--temperature", type=float, default=0.0,
                    help="sampling temperature (0 = greedy)")
     p.add_argument("--top-k", type=int, default=0,
@@ -525,7 +604,8 @@ def main(argv=None):
                spec_k=spec_k, trace=a.trace, arrivals=a.arrivals,
                arrival_gap=a.arrival_gap, slo_ttft=a.slo_ttft,
                slo_e2e=a.slo_e2e, admission=a.admission,
-               autoscale=a.autoscale)
+               autoscale=a.autoscale, trace_out=a.trace_out,
+               metrics_out=a.metrics_out, prom_out=a.prom_out)
 
 
 if __name__ == "__main__":

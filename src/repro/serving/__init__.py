@@ -9,7 +9,9 @@ per-request sampling, draft-then-verify speculative decoding) +
 selection, ``spec_k``) + ``ReplicaRouter`` (N engines behind one
 admission queue with pluggable routing policies, overflow re-routing,
 open-loop arrival release, SLO-aware admission, and ``AutoscalePolicy``
-fleet autoscaling).
+fleet autoscaling) + ``telemetry`` (vstep-clocked ``Tracer`` spans and
+ring events, the ``MetricsRegistry`` schema both ``to_metrics`` views
+are built on, and the Prometheus / Chrome-trace exporters).
 """
 
 from repro.serving.engine import KV_LAYOUTS, SERVABLE_FAMILIES, ServeEngine
@@ -19,12 +21,18 @@ from repro.serving.prefix_cache import PrefixCache, prefix_key
 from repro.serving.router import (ADMISSION_MODES, ROUTE_POLICIES,
                                   AutoscaleEvent, AutoscalePolicy,
                                   RejectedRequest, ReplicaRouter,
-                                  RouterStats, prefix_replica)
+                                  RouterStats, prefix_replica,
+                                  replay_peak_replicas)
 from repro.serving.sampling import K_CAP, effective_top_k, make_sampler
 from repro.serving.scheduler import (Request, RequestResult, Scheduler,
                                      ServeStats, VirtualClock,
                                      percentile_steps)
 from repro.serving.spec import Drafter, NGramDrafter
+from repro.serving.telemetry import (EVENT_KINDS, PHASES, ROUTER_SCHEMA,
+                                     SERVE_SCHEMA, MetricSpec,
+                                     MetricsRegistry, Span, TraceEvent,
+                                     Tracer, chrome_trace, json_sanitize,
+                                     prometheus_text, write_chrome_trace)
 from repro.serving.trace import (ARRIVAL_MODES, bursty_arrivals,
                                  longprompt_trace, poisson_arrivals,
                                  repetitive_trace, sharedprefix_trace,
@@ -42,4 +50,7 @@ __all__ = ["ServeEngine", "SERVABLE_FAMILIES", "KV_LAYOUTS", "KVCachePool",
            "ARRIVAL_MODES", "poisson_arrivals", "bursty_arrivals",
            "with_arrivals", "longprompt_trace", "repetitive_trace",
            "sharedprefix_trace", "trace_repetitiveness", "uniform_trace",
-           "zipf_trace"]
+           "zipf_trace", "Tracer", "Span", "TraceEvent", "MetricSpec",
+           "MetricsRegistry", "SERVE_SCHEMA", "ROUTER_SCHEMA", "PHASES",
+           "EVENT_KINDS", "prometheus_text", "chrome_trace",
+           "write_chrome_trace", "json_sanitize", "replay_peak_replicas"]

@@ -303,7 +303,8 @@ class ServeEngine:
             prefix_cache: bool | None = None,
             spec_k: int | None = None,
             slo_ttft_steps: int = 0,
-            slo_e2e_steps: int = 0) -> ServeStats:
+            slo_e2e_steps: int = 0,
+            tracer=None) -> ServeStats:
         """Drain `requests` under `policy` ('continuous' | 'static').
 
         A fresh pool per run keeps back-to-back policy comparisons honest
@@ -322,6 +323,10 @@ class ServeEngine:
         ``plan.serve_slo_e2e_steps``).  Requests whose ``arrival_vstep``
         is set are admitted open-loop: only once the virtual clock
         reaches their arrival.
+        ``tracer`` (a ``serving.telemetry.Tracer``) records per-request
+        spans and ring events on the virtual clock — pure host-side
+        bookkeeping behind None-guards, so tracing on/off cannot change
+        a single token.
         """
         chunk = self.prefill_chunk if prefill_chunk is None else prefill_chunk
         k = self.spec_k if spec_k is None else spec_k
@@ -335,7 +340,8 @@ class ServeEngine:
                           spec_k=k, drafter=self.drafter,
                           vocab_size=self.cfg.vocab_size,
                           slo_ttft_steps=slo_ttft_steps,
-                          slo_e2e_steps=slo_e2e_steps)
+                          slo_e2e_steps=slo_e2e_steps,
+                          tracer=tracer)
         stats = sched.run(list(requests))
         self.log(f"[serve:{self.kv_layout}:{policy}] {stats.summary()}")
         return stats

@@ -68,6 +68,7 @@ class PrefillJob:
     prompt: np.ndarray             # (n,) int32 pending prefix
     slot: int
     done: int = 0                  # tokens already scattered into the pool
+    chunks: int = 0                # chunk steps run so far (trace span index)
     admit_step: int = 0            # scheduler step at SUBMISSION — the
     #                                preemption-age stamp, so the victim
     #                                choice matches blocking admission
@@ -86,12 +87,18 @@ class PrefillManager:
     blocking degenerate, driven via ``drain``).
     """
 
-    def __init__(self, pool, chunk_step, chunk_tokens: int = 0):
+    def __init__(self, pool, chunk_step, chunk_tokens: int = 0,
+                 tracer=None, vclock=None, replica_id: int = 0):
         if chunk_tokens < 0:
             raise ValueError(f"chunk_tokens {chunk_tokens} < 0")
         self.pool = pool
         self.chunk_step = chunk_step   # (cache, toks, slot, off, n, *extras)
         self.chunk_tokens = chunk_tokens
+        # telemetry hook (None = off): host-side span bookkeeping only,
+        # recorded after each chunk lands — never inside the jitted step
+        self.tracer = tracer
+        self.vclock = vclock
+        self.replica_id = int(replica_id)
         self.jobs: deque[PrefillJob] = deque()
         # observability: the tuner's chunk-size choice is judged on these
         self.chunks_run = 0
@@ -138,6 +145,13 @@ class PrefillManager:
             self.pool.set_length(slot, cached)
         job = PrefillJob(entry=entry, st=st, prompt=prompt, slot=slot,
                          done=cached)
+        if self.tracer is not None and self.prefix_cache is not None:
+            # zero-width span: the probe + pointer-copy adoption happens
+            # at a single vstep, but hit/miss and tokens reused matter
+            t = self.vclock.t if self.vclock is not None else 0
+            self.tracer.span("cache_attach", st.rid, t, t,
+                             replica=self.replica_id, slot=slot,
+                             hit=bool(cached), tokens_cached=int(cached))
         self.jobs.append(job)
         self.queue_peak = max(self.queue_peak, len(self.jobs))
         return job
@@ -167,6 +181,15 @@ class PrefillManager:
             self.pool.cache, jnp.asarray(toks), jnp.int32(job.slot),
             jnp.int32(job.done), jnp.int32(c), bound, *extras)
         self.pool.adopt(new_cache)
+        if self.tracer is not None:
+            # each chunk is one vclock unit; tick()/drain() advance the
+            # clock right after this returns, so the span is (t, t+1)
+            t = self.vclock.t if self.vclock is not None else 0
+            self.tracer.span("prefill_chunk", job.st.rid, t, t + 1,
+                             replica=self.replica_id, slot=job.slot,
+                             index=job.chunks, tokens=c, bucket=bucket,
+                             offset=job.done)
+        job.chunks += 1
         job.done += c
         self.chunks_run += 1
         self.tokens_ingested += c

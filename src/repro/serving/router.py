@@ -179,7 +179,7 @@ class _Autoscaler:
     keep-the-global-batch resize semantics training elasticity uses.
     """
 
-    def __init__(self, pol: AutoscalePolicy, scheds, shared):
+    def __init__(self, pol: AutoscalePolicy, scheds, shared, tracer=None):
         n = len(scheds)
         self.max_r = pol.max_replicas or n
         if not 1 <= pol.min_replicas <= self.max_r <= n:
@@ -193,6 +193,7 @@ class _Autoscaler:
                       for i in range(n)]
         self.fleet_slots = sum(s.pool.num_slots for s in scheds)
         self.events: list[AutoscaleEvent] = []
+        self.tracer = tracer
         # a fresh fleet may scale immediately; cooldown gates *subsequent*
         # moves so one burst cannot slam the fleet to max in one round
         self.rounds_since_scale = pol.cooldown_rounds
@@ -220,6 +221,10 @@ class _Autoscaler:
         self.events.append(AutoscaleEvent(
             vstep=self.shared.t, action=action, replica=idx,
             serving=self.serving, per_replica_cap=self.per_cap))
+        if self.tracer is not None:
+            self.tracer.instant(f"autoscale_{action}", self.shared.t,
+                                replica=idx, serving=self.serving,
+                                per_replica_cap=self.per_cap)
         self.rounds_since_scale = 0
 
     def try_grow(self) -> bool:
@@ -247,6 +252,10 @@ class _Autoscaler:
                 self.events.append(AutoscaleEvent(
                     vstep=self.shared.t, action="stop", replica=i,
                     serving=self.serving, per_replica_cap=self.per_cap))
+                if self.tracer is not None:
+                    self.tracer.instant("autoscale_stop", self.shared.t,
+                                        replica=i, serving=self.serving,
+                                        per_replica_cap=self.per_cap)
         if self.rounds_since_scale < self.pol.cooldown_rounds:
             return
         if queue_depth:
@@ -261,6 +270,36 @@ class _Autoscaler:
             idx = max(i for i, st in enumerate(self.state)
                       if st == "active")
             self._scale("drain", idx, "draining")
+
+
+def replay_peak_replicas(events, min_replicas: int) -> int:
+    """Reconstruct ``RouterStats.peak_replicas`` from the AutoscaleEvent
+    log alone — the audit that the event stream is complete: every fleet
+    transition must appear, or the replayed peak diverges from the live
+    counter.  Start state is ``min_replicas`` active (replicas 0..min-1,
+    by construction); grow re-activates a draining replica or wakes a
+    dormant one, drain moves active -> draining (still working), stop
+    parks a drained-dry replica dormant."""
+    active = set(range(min_replicas))
+    draining: set = set()
+    peak = len(active)
+    for e in events:
+        if e.action == "grow":
+            draining.discard(e.replica)
+            active.add(e.replica)
+        elif e.action == "drain":
+            active.discard(e.replica)
+            draining.add(e.replica)
+        elif e.action == "stop":
+            draining.discard(e.replica)
+        else:
+            raise ValueError(f"unknown autoscale action {e.action!r}")
+        if len(active) != e.serving:
+            raise ValueError(
+                f"event log inconsistent at vstep {e.vstep}: replay has "
+                f"{len(active)} serving, event recorded {e.serving}")
+        peak = max(peak, len(active) + len(draining))
+    return peak
 
 
 def prefix_replica(prompt, n_replicas: int, prefix_len: int = 8) -> int:
@@ -352,37 +391,43 @@ class RouterStats:
 
     def to_metrics(self) -> dict:
         """Flat gauge/counter snapshot (see the module docstring for the
-        key schema) — plain numbers only, ready for a metrics scrape."""
-        m = {
-            "router_requests_completed": len(self.results),
-            "router_requests_rejected": len(self.rejected),
-            "router_generated_tokens": self.generated_tokens,
-            "router_goodput_tokens": self.goodput_tokens,
-            "router_slo_ttft_steps": self.slo_ttft_steps,
-            "router_slo_e2e_steps": self.slo_e2e_steps,
-            "router_ttft_p50_steps": self.p50_ttft_steps,
-            "router_ttft_p99_steps": self.p99_ttft_steps,
-            "router_e2e_p50_steps": self.p50_e2e_steps,
-            "router_e2e_p99_steps": self.p99_e2e_steps,
-            "router_mean_ttft_steps": self.mean_ttft_steps,
-            "router_total_vsteps": self.total_vsteps,
-            "router_peak_in_flight": self.peak_in_flight,
-            "router_peak_replicas": self.peak_replicas,
-            "router_reroutes": self.reroutes,
-            "router_autoscale_grows": self.autoscale_grows,
-            "router_autoscale_drains": self.autoscale_drains,
-            "router_load_imbalance": self.imbalance,
-            # wall-clock figures are ADVISORY — never gate on them
-            "router_wall_s": self.wall_s,
-            "router_tokens_per_s": self.tokens_per_s,
-        }
+        key schema) — plain numbers only, ready for a metrics scrape.
+
+        The keys are declared once in ``telemetry.ROUTER_SCHEMA`` and
+        this method is a *view* over that registry: setting a key the
+        schema does not declare, or leaving a declared key unset, raises
+        — so this table and the docstring schema cannot silently drift
+        (a unit test parses the docstring against the schema too)."""
+        from repro.serving.telemetry import ROUTER_SCHEMA, MetricsRegistry
+        reg = MetricsRegistry(ROUTER_SCHEMA)
+        reg.set("router_requests_completed", len(self.results))
+        reg.set("router_requests_rejected", len(self.rejected))
+        reg.set("router_generated_tokens", self.generated_tokens)
+        reg.set("router_goodput_tokens", self.goodput_tokens)
+        reg.set("router_slo_ttft_steps", self.slo_ttft_steps)
+        reg.set("router_slo_e2e_steps", self.slo_e2e_steps)
+        reg.set("router_ttft_p50_steps", self.p50_ttft_steps)
+        reg.set("router_ttft_p99_steps", self.p99_ttft_steps)
+        reg.set("router_e2e_p50_steps", self.p50_e2e_steps)
+        reg.set("router_e2e_p99_steps", self.p99_e2e_steps)
+        reg.set("router_mean_ttft_steps", self.mean_ttft_steps)
+        reg.set("router_total_vsteps", self.total_vsteps)
+        reg.set("router_peak_in_flight", self.peak_in_flight)
+        reg.set("router_peak_replicas", self.peak_replicas)
+        reg.set("router_reroutes", self.reroutes)
+        reg.set("router_autoscale_grows", self.autoscale_grows)
+        reg.set("router_autoscale_drains", self.autoscale_drains)
+        reg.set("router_load_imbalance", self.imbalance)
+        # wall-clock figures are ADVISORY — never gate on them
+        reg.set("router_wall_s", self.wall_s)
+        reg.set("router_tokens_per_s", self.tokens_per_s)
         for i, s in enumerate(self.replica_stats):
-            m[f"replica{i}_generated_tokens"] = s.generated_tokens
-            m[f"replica{i}_decode_steps"] = s.decode_steps
-            m[f"replica{i}_peak_resident_kv"] = s.peak_resident_tokens
-            m[f"replica{i}_preemptions"] = s.preemptions
-            m[f"replica{i}_occupancy"] = s.occupancy
-        return m
+            reg.set(f"replica{i}_generated_tokens", s.generated_tokens)
+            reg.set(f"replica{i}_decode_steps", s.decode_steps)
+            reg.set(f"replica{i}_peak_resident_kv", s.peak_resident_tokens)
+            reg.set(f"replica{i}_preemptions", s.preemptions)
+            reg.set(f"replica{i}_occupancy", s.occupancy)
+        return reg.snapshot()
 
     @property
     def imbalance(self) -> float:
@@ -685,7 +730,7 @@ class ReplicaRouter:
 
     def _reject_slo(self, queue: deque, scheds, accepting, shared,
                     rejected: list, slo_ttft_steps: int,
-                    slo_e2e_steps: int) -> None:
+                    slo_e2e_steps: int, tracer=None) -> None:
         """Reject-with-reason every queued FRESH request whose predicted
         TTFT/e2e blows its deadline (preempted or rerouted entries
         already emitted tokens — those are never rejected; they resume).
@@ -720,6 +765,11 @@ class ReplicaRouter:
                 rejected.append(RejectedRequest(
                     rid=en.req.rid, reason=reason, v_reject=shared.t,
                     predicted_ttft_steps=predicted))
+                if tracer is not None:
+                    tracer.end("queued", en.req.rid, shared.t,
+                               rejected=True)
+                    tracer.instant("reject", shared.t, rid=en.req.rid,
+                                   predicted_ttft_steps=predicted)
         queue.extend(kept)
 
     # -- main loop -----------------------------------------------------------
@@ -728,7 +778,8 @@ class ReplicaRouter:
             prefix_cache: bool | None = None,
             slo_ttft_steps: int = 0, slo_e2e_steps: int = 0,
             admission: str = "queue",
-            autoscale: AutoscalePolicy | None = None) -> RouterStats:
+            autoscale: AutoscalePolicy | None = None,
+            tracer=None) -> RouterStats:
         """Drain `requests` across the fleet under scheduling `policy`
         (``continuous`` refills replicas between steps; ``static`` gang-
         fills only idle replicas).  Fresh pools per run, like the engine.
@@ -759,7 +810,12 @@ class ReplicaRouter:
         replica lifecycle to an ``AutoscalePolicy`` (grow on queue
         depth / SLO headroom, drain when quiet) — continuous policy
         only, since a draining replica must keep stepping while closed
-        to admission."""
+        to admission.
+
+        ``tracer`` (a ``serving.telemetry.Tracer``) records per-request
+        spans (one Chrome-trace "process" per replica, one "thread" per
+        slot) and fleet ring events — host-side only, behind None-guards,
+        so tracing cannot perturb a single token."""
         requests = list(requests)
         if admission not in ADMISSION_MODES:
             raise ValueError(
@@ -791,8 +847,9 @@ class ReplicaRouter:
                             vocab_size=e.cfg.vocab_size,
                             vclock=RoundClock(shared),
                             slo_ttft_steps=slo_ttft_steps,
-                            slo_e2e_steps=slo_e2e_steps)
-                  for e in self.engines]
+                            slo_e2e_steps=slo_e2e_steps,
+                            tracer=tracer, replica_id=i)
+                  for i, e in enumerate(self.engines)]
         self._validate(requests, scheds)
         all_greedy = all(r.temperature <= 0 or r.top_k == 1
                          for r in requests)
@@ -803,7 +860,7 @@ class ReplicaRouter:
         for r in requests:
             r._t_submit = t0
         auto = None if autoscale is None else \
-            _Autoscaler(autoscale, scheds, shared)
+            _Autoscaler(autoscale, scheds, shared, tracer=tracer)
         # open loop: stable arrival sort — ties (and the all-zero closed
         # loop) keep trace order, so closed-loop behaviour is unchanged
         pending: deque = deque(sorted(
@@ -820,7 +877,14 @@ class ReplicaRouter:
             # release every request whose arrival the clock has reached
             while pending and \
                     getattr(pending[0].req, "arrival_vstep", 0) <= shared.t:
-                queue.append(pending.popleft())
+                en = pending.popleft()
+                if tracer is not None:
+                    # router-level wait starts at *arrival*; the span ends
+                    # when some replica admits (or SLO admission rejects)
+                    tracer.begin("queued", en.req.rid,
+                                 getattr(en.req, "arrival_vstep", 0),
+                                 prompt_len=len(en.req.prompt))
+                queue.append(en)
             if auto is not None:
                 accepting = auto.accepting()
                 if policy == "static":      # unreachable (validated above)
@@ -835,7 +899,8 @@ class ReplicaRouter:
                              if not (s.active or s.prefill_backlog)]
             if admission == "reject" and queue:
                 self._reject_slo(queue, scheds, accepting, shared,
-                                 rejected, slo_ttft_steps, slo_e2e_steps)
+                                 rejected, slo_ttft_steps, slo_e2e_steps,
+                                 tracer=tracer)
             progressed = self._dispatch(
                 queue, scheds, accepting,
                 cap=auto.per_cap if auto is not None else None)
@@ -865,6 +930,11 @@ class ReplicaRouter:
                 for en in reversed(s.step(evict_on_starvation=True)):
                     en.rerouted = True
                     reroutes += 1
+                    if tracer is not None:
+                        tracer.instant("reroute", shared.t,
+                                       replica=s.replica_id,
+                                       rid=en.req.rid,
+                                       tokens=len(en.st.tokens))
                     queue.appendleft(en)
                 # ordinary preemptions also resume through the router, so
                 # a request squeezed out of one replica may land on another
@@ -891,6 +961,8 @@ class ReplicaRouter:
                     shared.advance(nxt - shared.t)
 
         wall = self.clock() - t0
+        if tracer is not None:
+            tracer.close(shared.t)
         stats = [s.stats() for s in scheds]
         replica_of = {r.rid: i for i, s in enumerate(stats)
                       for r in s.results}

@@ -246,6 +246,7 @@ class ServeStats:
     spec_verify_steps: int = 0    # slot-verify scoring events
     spec_drafted_tokens: int = 0  # draft tokens proposed (k per slot-step)
     spec_accepted_tokens: int = 0  # draft tokens accepted (burst - 1 each)
+    total_vsteps: int = 0         # virtual-clock span of the whole drain
     # effective per-request top-k after the vocab/K_CAP cap: {rid: k} for
     # every admitted request that asked for a top-k filter — surfaces what
     # the sampler actually applied instead of silently clamping
@@ -254,6 +255,44 @@ class ServeStats:
     @property
     def tokens_per_s(self) -> float:
         return self.generated_tokens / max(self.wall_s, 1e-9)
+
+    def to_metrics(self) -> dict:
+        """Flat ``{key: number}`` snapshot of the single-engine drain —
+        the scrape a dashboard would ingest.  Keys and kinds come from
+        ``telemetry.SERVE_SCHEMA`` (the registry raises on a missing or
+        undeclared key, so this view cannot silently drift from the
+        schema); ``RouterStats.to_metrics`` is the same pattern over
+        ``ROUTER_SCHEMA`` with a shared key suffix vocabulary."""
+        from repro.serving.telemetry import SERVE_SCHEMA, MetricsRegistry
+        reg = MetricsRegistry(SERVE_SCHEMA)
+        reg.set("serve_requests_completed", len(self.results))
+        reg.set("serve_generated_tokens", self.generated_tokens)
+        reg.set("serve_goodput_tokens", self.goodput_tokens)
+        reg.set("serve_slo_ttft_steps", self.slo_ttft_steps)
+        reg.set("serve_slo_e2e_steps", self.slo_e2e_steps)
+        reg.set("serve_ttft_p50_steps", self.p50_ttft_steps)
+        reg.set("serve_ttft_p99_steps", self.p99_ttft_steps)
+        reg.set("serve_e2e_p50_steps", self.p50_e2e_steps)
+        reg.set("serve_e2e_p99_steps", self.p99_e2e_steps)
+        reg.set("serve_mean_ttft_steps", self.mean_ttft_steps)
+        reg.set("serve_total_vsteps", self.total_vsteps)
+        reg.set("serve_wall_s", self.wall_s)
+        reg.set("serve_tokens_per_s", self.tokens_per_s)
+        reg.set("serve_decode_steps", self.decode_steps)
+        reg.set("serve_occupancy", self.occupancy)
+        reg.set("serve_peak_active", self.peak_active)
+        reg.set("serve_peak_resident_kv", self.peak_resident_tokens)
+        reg.set("serve_preemptions", self.preemptions)
+        reg.set("serve_prefill_chunks", self.prefill_chunks)
+        reg.set("serve_prefill_tokens", self.prefill_tokens)
+        reg.set("serve_prefix_hits", self.prefix_hits)
+        reg.set("serve_prefix_misses", self.prefix_misses)
+        reg.set("serve_prefill_tokens_saved", self.prefill_tokens_saved)
+        reg.set("serve_prefix_evictions", self.prefix_evictions)
+        reg.set("serve_spec_verify_steps", self.spec_verify_steps)
+        reg.set("serve_spec_drafted_tokens", self.spec_drafted_tokens)
+        reg.set("serve_spec_accepted_tokens", self.spec_accepted_tokens)
+        return reg.snapshot()
 
     @property
     def accepted_per_verify(self) -> float:
@@ -338,7 +377,8 @@ class Scheduler:
                  prefill_chunk_unit: int = 16, vclock=None,
                  verify_fn=None, spec_k: int = 0, drafter=None,
                  vocab_size: int | None = None,
-                 slo_ttft_steps: int = 0, slo_e2e_steps: int = 0):
+                 slo_ttft_steps: int = 0, slo_e2e_steps: int = 0,
+                 tracer=None, replica_id: int = 0):
         if policy not in ("continuous", "static"):
             raise ValueError(policy)
         if prefill_chunk < 0 or prefill_chunk_unit < 1:
@@ -373,6 +413,12 @@ class Scheduler:
         # deadlines (virtual steps) goodput is judged by; 0 = unset
         self.slo_ttft_steps = int(slo_ttft_steps)
         self.slo_e2e_steps = int(slo_e2e_steps)
+        # telemetry hook: every call site is guarded by `is not None`, so
+        # tracing off costs one attribute load per event site and traces
+        # never reach jitted code — spans/events are pure host bookkeeping
+        # on the virtual clock and cannot move token streams
+        self.tracer = tracer
+        self.replica_id = int(replica_id)
         self.all_greedy = False
         self.reset()
 
@@ -398,7 +444,12 @@ class Scheduler:
         self._t0 = self.clock() if t0 is None else t0
         self._v0 = self.vclock.t           # virtual submission time
         self._mgr = None if self.chunk_step_fn is None else \
-            PrefillManager(self.pool, self.chunk_step_fn, self.prefill_chunk)
+            PrefillManager(self.pool, self.chunk_step_fn, self.prefill_chunk,
+                           tracer=self.tracer, vclock=self.vclock,
+                           replica_id=self.replica_id)
+        pc = getattr(self.pool, "prefix_cache", None)
+        if pc is not None and hasattr(pc, "bind_tracer"):
+            pc.bind_tracer(self.tracer, self.vclock, self.replica_id)
 
     @property
     def has_work(self) -> bool:
@@ -558,6 +609,13 @@ class Scheduler:
     def _admit(self, entry: _Entry) -> None:
         now = self.clock()
         req = entry.req
+        if self.tracer is not None:
+            # close whichever wait span this request was in — "queued"
+            # (fresh, begun at release) or "resume" (begun at preemption;
+            # matching is on (rid, phase) so a reroute's resume closes
+            # even when re-admission lands on another replica)
+            self.tracer.end_any(("resume", "queued"), req.rid, self.vclock.t,
+                                pending_tokens=int(entry.pending_len))
         if req.top_k:
             # surface what the sampler will actually apply (vocab and
             # K_CAP caps) — validated <= K_CAP, but a small-vocab model
@@ -631,6 +689,10 @@ class Scheduler:
         self.active[slot] = _Active(req, st, self._steps)
         self._last_tokens[slot, 0] = tok
         self._active_mask[slot] = 1
+        if self.tracer is not None:
+            self.tracer.begin("decode", req.rid, self.vclock.t,
+                              replica=self.replica_id, slot=slot,
+                              resident_tokens=int(self.pool.lengths[slot]))
 
     def _finish_prefill(self, job, logits) -> None:
         """A job's final chunk landed: sample the first token and either
@@ -651,6 +713,11 @@ class Scheduler:
         self.active[job.slot] = _Active(req, st, job.admit_step)
         self._last_tokens[job.slot, 0] = tok
         self._active_mask[job.slot] = 1
+        if self.tracer is not None:
+            self.tracer.begin("decode", req.rid, self.vclock.t,
+                              replica=self.replica_id, slot=job.slot,
+                              resident_tokens=int(
+                                  self.pool.lengths[job.slot]))
 
     # -- preemption --------------------------------------------------------
     def _evict(self, slot: int) -> _Entry:
@@ -658,6 +725,15 @@ class Scheduler:
         en = self.active.pop(slot)
         en.st.slot = -1
         en.st.preemptions += 1
+        if self.tracer is not None:
+            v = self.vclock.t
+            self.tracer.end("decode", en.st.rid, v, preempted=True,
+                            tokens=len(en.st.tokens))
+            self.tracer.instant("preempt", v, replica=self.replica_id,
+                                rid=en.st.rid, slot=slot,
+                                tokens=len(en.st.tokens))
+            self.tracer.begin("resume", en.st.rid, v,
+                              replica=self.replica_id)
         self._active_mask[slot] = 0
         self._last_tokens[slot, 0] = 0
         self.pool.free(slot)                 # returns its pages
@@ -676,6 +752,13 @@ class Scheduler:
         if st is not None:
             st.slot = -1
             st.preemptions += 1
+        if self.tracer is not None:
+            rid = job.entry.req.rid
+            v = self.vclock.t
+            self.tracer.instant("preempt", v, replica=self.replica_id,
+                                rid=rid, mid_prefill=True,
+                                ingested=int(job.done))
+            self.tracer.begin("resume", rid, v, replica=self.replica_id)
         self.queue.appendleft(_Entry(job.entry.req, st))
         self._preemptions += 1
 
@@ -756,6 +839,9 @@ class Scheduler:
                 self._active_mask[slot] = 0
                 self._last_tokens[slot, 0] = 0
                 self.pool.free(slot)
+                if self.tracer is not None:
+                    self.tracer.end("decode", st.rid, vnow,
+                                    tokens=len(st.tokens))
         return evicted
 
     # -- speculative decode -------------------------------------------------
@@ -831,6 +917,11 @@ class Scheduler:
             self._spec_verifies += 1
             self._spec_drafted += k
             self._spec_accepted += emitted - 1
+            if self.tracer is not None:
+                self.tracer.span("spec_verify", st.rid, vnow - 1, vnow,
+                                 replica=self.replica_id, slot=slot,
+                                 k=k, emitted=emitted,
+                                 accepted=emitted - 1, backed=cap)
             self.pool.set_length(slot,
                                  int(self.pool.lengths[slot]) + emitted)
             if finished:
@@ -841,6 +932,9 @@ class Scheduler:
                 self._active_mask[slot] = 0
                 self._last_tokens[slot, 0] = 0
                 self.pool.free(slot)
+                if self.tracer is not None:
+                    self.tracer.end("decode", st.rid, vnow,
+                                    tokens=len(st.tokens))
             else:
                 self._last_tokens[slot, 0] = int(toks[slot, emitted - 1])
         self.pool.sync_index()
@@ -882,6 +976,7 @@ class Scheduler:
             spec_verify_steps=self._spec_verifies,
             spec_drafted_tokens=self._spec_drafted,
             spec_accepted_tokens=self._spec_accepted,
+            total_vsteps=self.vclock.t - self._v0,
             effective_top_k=dict(self._eff_topk))
 
     # -- main loop ---------------------------------------------------------
@@ -908,7 +1003,16 @@ class Scheduler:
             while pending and self._v0 + \
                     getattr(pending[0].req, "arrival_vstep", 0) \
                     <= self.vclock.t:
-                self.queue.append(pending.popleft())
+                en = pending.popleft()
+                if self.tracer is not None:
+                    # the wait span starts at *arrival*, not release: a
+                    # fast-forwarded idle gap still counts as queue time 0
+                    self.tracer.begin(
+                        "queued", en.req.rid,
+                        self._v0 + getattr(en.req, "arrival_vstep", 0),
+                        replica=self.replica_id,
+                        prompt_len=len(en.req.prompt))
+                self.queue.append(en)
             if self.policy == "continuous" or \
                     not (self.active or self.prefill_backlog):
                 self.admit_from_queue()
@@ -924,4 +1028,6 @@ class Scheduler:
                     self.vclock.advance(nxt - self.vclock.t)
                 continue
             self.step()
+        if self.tracer is not None:
+            self.tracer.close(self.vclock.t)
         return self.stats()

@@ -57,6 +57,13 @@ class NGramDrafter(Drafter):
         if max_n < 1:
             raise ValueError(f"max_n {max_n} < 1")
         self.max_n = max_n
+        # observability: how often the suffix rule actually fires vs the
+        # repeat-last fallback — a drafter whose fallback dominates is
+        # wasting verify steps, which is the tuner's cue to turn spec off
+        self.calls = 0                # draft() invocations
+        self.drafted_tokens = 0       # k summed over calls
+        self.ngram_hits = 0           # proposals from a recurring suffix
+        self.fallbacks = 0            # proposals from repeat-last
 
     def _next(self, hist: list[int]) -> int:
         L = len(hist)
@@ -65,10 +72,14 @@ class NGramDrafter(Drafter):
             # most recent earlier occurrence of the suffix n-gram
             for p in range(L - n - 1, -1, -1):
                 if hist[p:p + n] == suffix:
+                    self.ngram_hits += 1
                     return hist[p + n]
+        self.fallbacks += 1
         return hist[-1]
 
     def draft(self, history: list[int], k: int) -> list[int]:
+        self.calls += 1
+        self.drafted_tokens += k
         hist = [int(t) for t in history]
         if not hist:
             return [0] * k
