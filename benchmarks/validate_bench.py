@@ -87,6 +87,13 @@ CELL_SCHEMA = {
 # Keys whose values are strings, not numbers.
 _STR_KEYS = {"arch", "arrivals", "kv_kernel", "route_policy"}
 
+# Cells are gated positions: downstream regression gates diff every
+# cell key against the baseline, so a wall-clock-derived key here would
+# gate on machine noise.  `tokens_per_s` is the one advisory wall
+# metric the table carries (the run-time gate strips it); anything
+# spelled `wall_*` is rejected outright.
+_WALL_PREFIX = "wall_"
+
 
 def _reject_constant(name: str) -> float:
     raise ValueError(f"non-finite JSON literal {name!r} — the bench "
@@ -135,6 +142,12 @@ def check(data) -> list[str]:
         if extra := cell.keys() - want:
             problems.append(f"cell {name!r} unknown keys: "
                             f"{sorted(extra)}")
+        if wall := sorted(k for k in (cell.keys() | want)
+                          if k.startswith(_WALL_PREFIX)):
+            problems.append(
+                f"cell {name!r} carries wall-clock keys {wall} in a "
+                f"gated position — gated metrics must be vstep-derived"
+                f" (tokens_per_s is the only advisory wall metric)")
         for key in sorted(want & cell.keys()):
             val = cell[key]
             if key in _STR_KEYS:

@@ -1,0 +1,32 @@
+"""easeylint — AST-level invariant checker for the repro codebase.
+
+Six repo-specific rules enforce the invariants nine PRs of serving work
+established by hand (see each rule module's docstring for the full
+contract):
+
+==================  =====================================================
+rule id             invariant
+==================  =====================================================
+wall-clock          no wall-clock escape into gated metrics/artifacts
+jit-purity          jit/scan/pallas bodies never touch host state
+telemetry-guard     every tracer call dominated by `is not None`
+keyed-rng           serving RNG keys are (rid, step) fold_in chains
+refcount-pairing    page acquisitions release or hand off on all exits
+vmem-budget         Pallas block+scratch bytes fit the target's VMEM
+==================  =====================================================
+
+Run ``python -m repro.analysis.lint src/ benchmarks/`` (CI does, before
+pytest).  Suppress a single advisory site with a justified
+``# easeylint: allow[rule-id]`` pragma; whole advisory files live in
+``allow.toml`` next to this package, each entry with a ``reason``.
+Rules 1-5 need no JAX import; the VMEM rule imports ``core/tuning`` for
+the per-target budget and falls back to the same fraction of
+``TargetSpec.vmem_bytes`` when JAX is absent.
+"""
+
+from repro.analysis.lint.core import (AllowEntry, Finding, LintConfig,
+                                      default_config, lint_paths,
+                                      lint_source)
+
+__all__ = ["AllowEntry", "Finding", "LintConfig", "default_config",
+           "lint_paths", "lint_source"]

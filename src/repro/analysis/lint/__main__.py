@@ -1,0 +1,68 @@
+"""CLI: ``python -m repro.analysis.lint [paths...] --format {text,json}``.
+
+Exit status 1 when any error-severity finding survives pragma/allowlist
+suppression; info findings (the VMEM estimates) never fail the run.
+JSON output is a stable schema (``version`` bumps on breaking change)::
+
+    {"version": 1, "files": N, "rules": [...],
+     "errors": E, "infos": I, "findings": [{rule, path, line, col,
+                                            severity, message, hint}]}
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.lint.core import LintConfig, lint_paths
+
+JSON_VERSION = 1
+
+
+def main(argv=None) -> int:
+    from repro.analysis.lint.rules import ALL_RULES
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="easeylint: AST invariant checker (determinism, jit "
+                    "purity, telemetry guards, keyed RNG, refcount "
+                    "pairing, Pallas VMEM budgets)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--allowlist", default=None,
+                    help="allow.toml path (default: the bundled one)")
+    ap.add_argument("--rules", default=None,
+                    help=f"comma-separated subset of {sorted(ALL_RULES)}")
+    args = ap.parse_args(argv)
+
+    cfg = LintConfig.from_file(args.allowlist) if args.allowlist else None
+    rule_ids = [r.strip() for r in args.rules.split(",")] \
+        if args.rules else None
+    roots = args.paths or ["src"]
+    missing = [p for p in roots if not Path(p).exists()]
+    if missing:
+        print(f"easeylint: no such path(s): {missing}", file=sys.stderr)
+        return 2
+    findings, nfiles = lint_paths(roots, cfg=cfg, rule_ids=rule_ids)
+    errors = [f for f in findings if f.severity == "error"]
+    infos = [f for f in findings if f.severity == "info"]
+
+    if args.format == "json":
+        out = {"version": JSON_VERSION, "files": nfiles,
+               "rules": sorted(rule_ids or ALL_RULES),
+               "errors": len(errors), "infos": len(infos),
+               "findings": [f.to_dict() for f in findings]}
+        print(json.dumps(out, indent=2, sort_keys=False))
+    else:
+        for f in findings:
+            print(f.render())
+        tail = (f"easeylint: {nfiles} files, {len(errors)} error(s), "
+                f"{len(infos)} advisory note(s)")
+        print(tail if not errors else f"{tail} — FAIL")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

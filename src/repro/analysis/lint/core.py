@@ -1,0 +1,268 @@
+"""easeylint core: findings, pragma/allowlist suppression, the runner.
+
+The linter enforces the repo's hand-maintained invariants statically
+(vstep-only clocks, guarded telemetry, (rid, step)-keyed sampling,
+refcount pairing, jit purity, Pallas VMEM budgets).  Rules are AST
+visitors producing a shared :class:`Finding` type; the runner parses
+each file once, fans it out to every rule, then strips findings that a
+``# easeylint: allow[rule-id]`` pragma (same line or the line above) or
+an ``allow.toml`` entry covers.
+
+Severity is two-level: ``error`` findings fail the run (CI gates on
+them); ``info`` findings are advisory reports (the VMEM rule's
+per-kernel byte estimates) and never affect the exit status.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import os
+import re
+from pathlib import Path
+
+from repro.analysis.lint import toml_lite
+
+PRAGMA_RE = re.compile(r"#\s*easeylint:\s*allow\[([^\]]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str                # repo-relative, posix separators
+    line: int
+    col: int
+    message: str
+    hint: str = ""
+    severity: str = "error"  # "error" | "info"
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "severity": self.severity,
+                "message": self.message, "hint": self.hint}
+
+    def render(self) -> str:
+        out = (f"{self.path}:{self.line}:{self.col}: "
+               f"[{self.severity}] {self.rule}: {self.message}")
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+
+@dataclasses.dataclass
+class Source:
+    """One parsed file, shared by every rule."""
+    rel: str                 # path as reported in findings
+    text: str
+    tree: ast.Module
+    lines: list[str]
+
+
+@dataclasses.dataclass(frozen=True)
+class AllowEntry:
+    rule: str
+    path: str
+    reason: str
+
+
+@dataclasses.dataclass
+class LintConfig:
+    """Parsed ``allow.toml``: site allowlist + VMEM-rule parameters."""
+    allow: tuple[AllowEntry, ...] = ()
+    vmem_target: str = "lrz:tpu-v5e-pod"
+    vmem_bounds: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_file(cls, path: str | Path) -> "LintConfig":
+        return cls.from_text(Path(path).read_text())
+
+    @classmethod
+    def from_text(cls, text: str) -> "LintConfig":
+        data = toml_lite.loads(text)
+        entries = []
+        for i, raw in enumerate(data.get("allow", []), 1):
+            rule, apath = raw.get("rule"), raw.get("path")
+            reason = raw.get("reason", "")
+            if not rule or not apath:
+                raise ValueError(f"allow entry #{i} needs rule= and path=")
+            if not reason.strip():
+                # the allowlist is documentation as much as suppression —
+                # an entry without a why is a finding waiting to rot
+                raise ValueError(
+                    f"allow entry #{i} ({rule} @ {apath}) needs a reason=")
+            entries.append(AllowEntry(rule, apath, reason))
+        vmem = data.get("vmem", {})
+        bounds = {k: int(v) for k, v in vmem.get("bounds", {}).items()}
+        return cls(allow=tuple(entries),
+                   vmem_target=vmem.get("target", "lrz:tpu-v5e-pod"),
+                   vmem_bounds=bounds)
+
+
+def default_config() -> LintConfig:
+    return LintConfig.from_file(Path(__file__).parent / "allow.toml")
+
+
+# ---------------------------------------------------------------------------
+# suppression
+
+def _path_match(finding_path: str, pattern: str) -> bool:
+    fp = finding_path.replace(os.sep, "/")
+    pat = pattern.replace(os.sep, "/")
+    if pat.endswith("/"):                       # directory prefix
+        return fp.startswith(pat) or ("/" + pat) in ("/" + fp)
+    if fnmatch.fnmatch(fp, pat):
+        return True
+    return fp == pat or fp.endswith("/" + pat)
+
+
+def pragma_rules(line: str) -> set[str]:
+    m = PRAGMA_RE.search(line)
+    if not m:
+        return set()
+    return {tok.strip() for tok in m.group(1).split(",") if tok.strip()}
+
+
+def suppressed(finding: Finding, src: Source, cfg: LintConfig) -> bool:
+    for ln in (finding.line, finding.line - 1):
+        if 1 <= ln <= len(src.lines):
+            ids = pragma_rules(src.lines[ln - 1])
+            if finding.rule in ids or "*" in ids:
+                return True
+    return any(e.rule in (finding.rule, "*") and
+               _path_match(finding.path, e.path) for e in cfg.allow)
+
+
+# ---------------------------------------------------------------------------
+# small AST helpers shared by the rules
+
+def dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def root_name(node: ast.AST) -> str | None:
+    """Leftmost Name of an attribute/subscript chain."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def import_aliases(tree: ast.AST) -> set[str]:
+    """Every local name bound by an import (module aliases and members)."""
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                names.add((alias.asname or alias.name).split(".")[0])
+    return names
+
+
+def func_defs(tree: ast.AST) -> dict:
+    """name -> def node for every (possibly nested) function in the tree.
+    On name collisions the first definition wins — good enough for the
+    call-graph walk, which only needs *a* body to inspect."""
+    out = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, node)
+    return out
+
+
+def bound_names(fn: ast.AST) -> set[str]:
+    """Names bound anywhere inside *fn* (args of it and nested defs,
+    assignment/for/with/comprehension targets, local defs, imports)."""
+    names = set()
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(node.name)
+            a = node.args
+            for arg in (a.posonlyargs + a.args + a.kwonlyargs):
+                names.add(arg.arg)
+            if a.vararg:
+                names.add(a.vararg.arg)
+            if a.kwarg:
+                names.add(a.kwarg.arg)
+        elif isinstance(node, ast.Lambda):
+            a = node.args
+            for arg in (a.posonlyargs + a.args + a.kwonlyargs):
+                names.add(arg.arg)
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                names.add((alias.asname or alias.name).split(".")[0])
+    return names
+
+
+# ---------------------------------------------------------------------------
+# runner
+
+def _rule_instances(rule_ids=None):
+    from repro.analysis.lint.rules import ALL_RULES
+    ids = list(ALL_RULES) if rule_ids is None else list(rule_ids)
+    unknown = [r for r in ids if r not in ALL_RULES]
+    if unknown:
+        raise ValueError(f"unknown rule(s) {unknown}; known: "
+                         f"{sorted(ALL_RULES)}")
+    return [ALL_RULES[r]() for r in ids]
+
+
+def lint_source(text: str, rel: str, cfg: LintConfig | None = None,
+                rule_ids=None) -> list[Finding]:
+    """Lint one in-memory source blob (the test fixtures' entry point)."""
+    cfg = cfg if cfg is not None else LintConfig()
+    rel = rel.replace(os.sep, "/")
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Finding("parse", rel, e.lineno or 1, e.offset or 0,
+                        f"syntax error: {e.msg}")]
+    src = Source(rel=rel, text=text, tree=tree, lines=text.splitlines())
+    findings: list[Finding] = []
+    for rule in _rule_instances(rule_ids):
+        findings.extend(rule.check(src, cfg))
+    # dedupe: rules that walk nested defs can visit a site twice
+    findings = list(dict.fromkeys(
+        f for f in findings if not suppressed(f, src, cfg)))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+def iter_py_files(roots) -> list[Path]:
+    files: list[Path] = []
+    for root in roots:
+        p = Path(root)
+        if p.is_file():
+            files.append(p)
+            continue
+        for f in sorted(p.rglob("*.py")):
+            if "__pycache__" in f.parts or \
+                    any(part.startswith(".") for part in f.parts[1:]):
+                continue
+            files.append(f)
+    return files
+
+
+def lint_paths(roots, cfg: LintConfig | None = None,
+               rule_ids=None) -> tuple[list[Finding], int]:
+    """Lint every ``.py`` under *roots*; returns (findings, files seen).
+    Finding paths are relative to the current directory when possible so
+    they match the repo-root-relative allowlist entries."""
+    cfg = cfg if cfg is not None else default_config()
+    cwd = Path.cwd()
+    findings: list[Finding] = []
+    files = iter_py_files(roots)
+    for f in files:
+        try:
+            rel = str(f.resolve().relative_to(cwd))
+        except ValueError:
+            rel = str(f)
+        findings.extend(lint_source(f.read_text(), rel, cfg, rule_ids))
+    findings.sort(key=lambda x: (x.path, x.line, x.col, x.rule))
+    return findings, len(files)

@@ -1,0 +1,18 @@
+"""Rule registry: rule id -> visitor class.
+
+Each rule exposes ``id`` and ``check(src, cfg) -> list[Finding]``; the
+runner owns parsing, pragma and allowlist suppression, exit status.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.lint.rules.wall_clock import WallClockRule
+from repro.analysis.lint.rules.jit_purity import JitPurityRule
+from repro.analysis.lint.rules.telemetry_guard import TelemetryGuardRule
+from repro.analysis.lint.rules.keyed_rng import KeyedRngRule
+from repro.analysis.lint.rules.refcount import RefcountPairingRule
+from repro.analysis.lint.rules.vmem_budget import VmemBudgetRule
+
+ALL_RULES = {cls.id: cls for cls in (
+    WallClockRule, JitPurityRule, TelemetryGuardRule, KeyedRngRule,
+    RefcountPairingRule, VmemBudgetRule)}

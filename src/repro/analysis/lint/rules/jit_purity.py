@@ -1,0 +1,156 @@
+"""Rule ``jit-purity``: traced functions stay pure host-side.
+
+Functions that enter a trace — passed to ``jax.jit``, ``jax.lax.scan``
+or ``pl.pallas_call``, or decorated with ``@jax.jit`` /
+``@functools.partial(jax.jit, ...)`` — execute at trace time, once, not
+at call time.  Host-side effects inside them (mutating captured state,
+appending to lists, telemetry calls, branching on ``tracer``) silently
+freeze into the jitted program or vanish after the first call; both are
+bugs the equivalence tests only see when re-tracing happens to change.
+
+Resolution walks each module's own call graph: jit/scan/pallas entry
+points are found syntactically (including ``functools.partial(kernel,
+...)`` operands), then same-module functions they call by name join the
+traced set transitively.  Inside a traced function the rule flags:
+
+* mutating method calls (``append``/``update``/``add``/...) whose
+  receiver is a *captured* name — bound outside the traced function and
+  not a module import alias;
+* assignments (plain, augmented, or subscript/attribute stores) whose
+  target's root name is captured — a pallas ``o_ref[...] = ...`` is
+  fine because the ref is a parameter;
+* ``global`` / ``nonlocal`` declarations;
+* any reference to a name or attribute containing ``tracer`` —
+  telemetry must never enter traced code (ROADMAP §Observability).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint.core import (Finding, Source, bound_names, dotted,
+                                      func_defs, import_aliases, root_name)
+
+JIT_WRAPPERS = {"jax.jit", "jit"}
+SCAN_FNS = {"jax.lax.scan", "lax.scan"}
+PALLAS_FNS = {"pl.pallas_call", "pallas_call", "pltpu.pallas_call"}
+PARTIAL_FNS = {"functools.partial", "partial"}
+
+MUTATORS = {"append", "extend", "insert", "add", "update", "pop",
+            "popleft", "appendleft", "remove", "discard", "clear",
+            "setdefault", "write"}
+
+HINT = ("traced functions run at trace time: keep host state, tracers "
+        "and python-side accumulation outside jit/scan/pallas bodies")
+
+
+def _callee_name(node: ast.AST) -> str | None:
+    """Function name referenced by a jit/scan/pallas operand."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Call):
+        d = dotted(node.func)
+        if d in PARTIAL_FNS and node.args:
+            return _callee_name(node.args[0])
+    return None
+
+
+def _traced_roots(tree: ast.AST) -> set[str]:
+    roots: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                d = dotted(dec)
+                if d in JIT_WRAPPERS:
+                    roots.add(node.name)
+                elif isinstance(dec, ast.Call):
+                    dd = dotted(dec.func)
+                    if dd in JIT_WRAPPERS:
+                        roots.add(node.name)
+                    elif dd in PARTIAL_FNS and dec.args and \
+                            dotted(dec.args[0]) in JIT_WRAPPERS:
+                        roots.add(node.name)
+        elif isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if d in (JIT_WRAPPERS | SCAN_FNS | PALLAS_FNS) and node.args:
+                name = _callee_name(node.args[0])
+                if name:
+                    roots.add(name)
+            elif d in PALLAS_FNS:
+                # pallas_call(kernel, ...) with the kernel as a keyword
+                for kw in node.keywords:
+                    name = _callee_name(kw.value)
+                    if name:
+                        roots.add(name)
+    return roots
+
+
+class JitPurityRule:
+    id = "jit-purity"
+
+    def check(self, src: Source, cfg) -> list[Finding]:
+        defs = func_defs(src.tree)
+        roots = _traced_roots(src.tree) & defs.keys()
+        if not roots:
+            return []
+        module_aliases = import_aliases(src.tree)
+        module_defs = {n.name for n in src.tree.body
+                       if isinstance(n, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))}
+        # transitive closure over same-module calls by name
+        traced, frontier = set(), list(roots)
+        while frontier:
+            name = frontier.pop()
+            if name in traced:
+                continue
+            traced.add(name)
+            for node in ast.walk(defs[name]):
+                if isinstance(node, ast.Call):
+                    callee = dotted(node.func)
+                    if callee in defs and callee not in traced:
+                        frontier.append(callee)
+        findings: list[Finding] = []
+        for name in sorted(traced):
+            self._check_traced(defs[name], src, module_aliases,
+                               module_defs, findings)
+        return findings
+
+    def _check_traced(self, fn, src: Source, module_aliases: set[str],
+                      module_defs: set[str], findings: list[Finding]):
+        local = bound_names(fn)
+        ok_roots = local | module_aliases | module_defs
+
+        def flag(node, msg):
+            findings.append(Finding(
+                self.id, src.rel, node.lineno, node.col_offset,
+                f"traced function `{fn.name}` {msg}", hint=HINT))
+
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                flag(node, f"declares {type(node).__name__.lower()} "
+                           f"{', '.join(node.names)} — host-state "
+                           f"mutation inside a trace")
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in MUTATORS:
+                root = root_name(node.func.value)
+                if root is not None and root not in ok_roots:
+                    flag(node, f"mutates captured `{root}."
+                               f"{node.func.attr}(...)` — the effect "
+                               f"runs at trace time, not per call")
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    if isinstance(t, (ast.Attribute, ast.Subscript)):
+                        root = root_name(t)
+                        if root is not None and root not in ok_roots:
+                            flag(node, f"stores into captured `{root}` — "
+                                       f"host-state mutation inside a "
+                                       f"trace")
+            if isinstance(node, ast.Name) and "tracer" in node.id:
+                flag(node, f"references `{node.id}` — telemetry must "
+                           f"stay host-side, outside traced code")
+            elif isinstance(node, ast.Attribute) and "tracer" in node.attr:
+                flag(node, f"references `.{node.attr}` — telemetry must "
+                           f"stay host-side, outside traced code")

@@ -1,0 +1,117 @@
+"""Rule ``keyed-rng``: serving-side RNG must be (rid, step)-keyed.
+
+Sampling determinism across admission order, slot assignment, preemption
+and speculation all rest on one discipline (serving/sampling.py): the
+key for any draw is ``fold_in(fold_in(base, rid), step)``.  A literal
+``PRNGKey(0)``, a base key drawn from directly, or one key reused for
+two draws silently breaks stream identity in ways the equivalence tests
+only catch when the colliding schedule happens to be exercised.
+
+Scope: files under ``serving/``.  Flags, per function:
+
+* ``jax.random.PRNGKey(<literal>)`` — a hard-coded seed;
+* a draw (``categorical``, ``uniform``, ...) whose key argument is
+  neither a ``fold_in``-derived expression/name nor a function
+  parameter (a parameter is the *caller's* obligation — the helper
+  pattern make_sampler uses);
+* a name assigned from ``PRNGKey(...)`` passed to a draw directly
+  (base keys exist to be folded, not drawn from);
+* the same key name feeding two or more draws (unkeyed reuse).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint.core import Finding, Source, dotted
+
+DRAWS = {"categorical", "uniform", "normal", "bernoulli", "gumbel",
+         "choice", "randint", "permutation", "exponential",
+         "truncated_normal", "dirichlet", "beta", "gamma", "poisson",
+         "laplace", "shuffle"}
+
+HINT = ("derive keys as fold_in(fold_in(base, rid), step) — see "
+        "serving/sampling.py; a fresh fold per draw keeps streams "
+        "deterministic under preemption and speculation")
+
+
+def _is_random_fn(call: ast.Call, name: str) -> bool:
+    d = dotted(call.func)
+    return bool(d) and (d == f"jax.random.{name}" or
+                        d == f"random.{name}" or d == name)
+
+
+def _contains_fold_in(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            d = dotted(sub.func)
+            if d and d.split(".")[-1] == "fold_in":
+                return True
+    return False
+
+
+class KeyedRngRule:
+    id = "keyed-rng"
+
+    def check(self, src: Source, cfg) -> list[Finding]:
+        if "/serving/" not in "/" + src.rel.replace("\\", "/"):
+            return []
+        findings: list[Finding] = []
+        for node in ast.walk(src.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._check_fn(node, src, findings)
+            elif isinstance(node, ast.Call) and \
+                    _is_random_fn(node, "PRNGKey") and node.args and \
+                    isinstance(node.args[0], ast.Constant):
+                findings.append(Finding(
+                    self.id, src.rel, node.lineno, node.col_offset,
+                    f"literal PRNGKey({node.args[0].value!r}) — seeds must "
+                    f"be injected, never hard-coded", hint=HINT))
+        return findings
+
+    def _check_fn(self, fn, src: Source, findings: list[Finding]) -> None:
+        a = fn.args
+        params = {arg.arg for arg in a.posonlyargs + a.args + a.kwonlyargs}
+        folded: set[str] = set()
+        base_keys: set[str] = set()
+        for st in ast.walk(fn):
+            if isinstance(st, ast.Assign) and len(st.targets) == 1 and \
+                    isinstance(st.targets[0], ast.Name):
+                name = st.targets[0].id
+                if _contains_fold_in(st.value):
+                    folded.add(name)
+                elif isinstance(st.value, ast.Call) and \
+                        _is_random_fn(st.value, "PRNGKey"):
+                    base_keys.add(name)
+        draws_per_key: dict[str, int] = {}
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            d = dotted(call.func)
+            if not d or d.split(".")[-1] not in DRAWS or \
+                    not _is_random_fn(call, d.split(".")[-1]):
+                continue
+            if not call.args:
+                continue
+            key = call.args[0]
+            kname = key.id if isinstance(key, ast.Name) else None
+            if kname is not None:
+                draws_per_key[kname] = draws_per_key.get(kname, 0) + 1
+            if kname in base_keys:
+                findings.append(Finding(
+                    self.id, src.rel, call.lineno, call.col_offset,
+                    f"base key `{kname}` drawn from directly — fold "
+                    f"(rid, step) in first", hint=HINT))
+            elif not (_contains_fold_in(key) or kname in folded or
+                      kname in params):
+                findings.append(Finding(
+                    self.id, src.rel, call.lineno, call.col_offset,
+                    f"draw `{d}` keyed by an expression that is not "
+                    f"fold_in-derived", hint=HINT))
+            elif kname is not None and draws_per_key[kname] > 1:
+                findings.append(Finding(
+                    self.id, src.rel, call.lineno, call.col_offset,
+                    f"key `{kname}` reused for a second draw in the same "
+                    f"function — every draw needs its own fold",
+                    hint=HINT))
+        return None

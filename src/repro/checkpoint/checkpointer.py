@@ -8,20 +8,45 @@
   pytree path, so a checkpoint written on a 16x16 mesh restores onto a
   15x16 degraded mesh (elastic restart) or a single CPU.
 * keep-last-k with a manifest for discovery.
+* deterministic bytes: the metadata timestamp is injectable (``now=``,
+  advisory wall clock by default) and the array blob is written through
+  a fixed-timestamp zip writer — two checkpoints of the same state at
+  the same step are byte-identical, so checkpoint diffs mean state
+  diffs, never clock noise (``np.savez`` would bake the wall clock into
+  every zip entry's mtime).
 """
 
 from __future__ import annotations
 
+import io
 import json
 import os
 import queue
 import shutil
 import threading
 import time
+import zipfile
 from pathlib import Path
 
 import jax
 import numpy as np
+
+# zip entries need a DOS timestamp; pin the epoch so identical arrays
+# produce identical bytes
+_ZIP_EPOCH = (1980, 1, 1, 0, 0, 0)
+
+
+def _savez_deterministic(path, arrays: dict) -> None:
+    """``np.savez`` minus the wall clock: sorted members, fixed zip
+    timestamps, no compression (np.load reads it like any npz)."""
+    with zipfile.ZipFile(path, "w", zipfile.ZIP_STORED) as zf:
+        for key in sorted(arrays):
+            buf = io.BytesIO()
+            np.lib.format.write_array(
+                buf, np.ascontiguousarray(arrays[key]), allow_pickle=False)
+            info = zipfile.ZipInfo(key + ".npy", date_time=_ZIP_EPOCH)
+            info.external_attr = 0o644 << 16
+            zf.writestr(info, buf.getvalue())
 
 
 def _flatten(state):
@@ -35,10 +60,15 @@ def _flatten(state):
 
 class Checkpointer:
     def __init__(self, directory: str | Path, keep: int = 3,
-                 async_writes: bool = False):
+                 async_writes: bool = False,
+                 # advisory default — anything needing byte-identical
+                 # checkpoints injects a fixed clock; asserted in
+                 # tests/test_checkpoint_ft.py
+                 now=time.time):  # easeylint: allow[wall-clock]
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        self.now = now
         self.async_writes = async_writes
         self._q: queue.Queue | None = None
         self._thread = None
@@ -106,9 +136,10 @@ class Checkpointer:
                 meta[k] = "bfloat16"
             else:
                 savable[k] = v
-        np.savez(tmp / "arrays.npz", **savable)
+        _savez_deterministic(tmp / "arrays.npz", savable)
         (tmp / "meta.json").write_text(json.dumps(
-            {"step": step, "dtypes": meta, "time": time.time()}))
+            {"step": step, "dtypes": meta, "time": self.now()},
+            sort_keys=True))
         if final.exists():
             shutil.rmtree(final)
         os.rename(tmp, final)

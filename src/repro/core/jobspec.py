@@ -73,7 +73,9 @@ class JobSpec:
         """'a hash which is determined by the system at the moment of
         submission' (paper §3)."""
         if not self.job_id:
-            payload = f"{self.name}:{time.time_ns()}"
+            # submission-moment entropy is the paper's spec — hash input,
+            # never a metric
+            payload = f"{self.name}:{time.time_ns()}"  # easeylint: allow[wall-clock]
             self.job_id = hashlib.sha256(payload.encode()).hexdigest()[:12]
         return self.job_id
 

@@ -24,6 +24,11 @@ class TargetSpec:
     ici_bw: float                   # bytes/s per link
     scheduler: str = "slurm"        # slurm | pbs | local
     kernels: str = "pallas"         # pallas | reference
+    # per-core VMEM capacity: the static budget Pallas block + scratch
+    # shapes are linted against (analysis/lint vmem-budget rule).  CPU
+    # targets keep the v5e figure — interpret-mode kernels must fit the
+    # real accelerator they are rehearsing for.
+    vmem_bytes: float = 128 * 2**20
     description: str = ""
 
     @property

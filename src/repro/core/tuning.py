@@ -34,6 +34,19 @@ SERVE_EXPECTED_LEN_FRACTION = 0.25
 # verify step's (k+1)-wide compute, so the tuner keeps spec off
 SPEC_MIN_REPETITIVENESS = 0.35
 SPEC_MAX_K = 8
+# Pallas kernels budget this fraction of the target's per-core VMEM for
+# block + scratch residency; the remainder covers compiler-managed
+# spills and semaphores.  analysis/lint's vmem-budget rule enforces it
+# statically (and mirrors the fraction for JAX-less environments —
+# tests pin the two together).
+VMEM_BUDGET_FRACTION = 0.9
+
+
+def vmem_budget_bytes(target: TargetSpec) -> float:
+    """Static VMEM byte budget a single Pallas kernel may plan for."""
+    return VMEM_BUDGET_FRACTION * target.vmem_bytes
+
+
 # SLO deadlines the tuner suggests, on the virtual step clock: TTFT gets
 # a multiple of the expected prefill stall (queue wait + ingestion both
 # have to fit under it), e2e adds a per-token decode allowance on top

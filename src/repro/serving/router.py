@@ -545,7 +545,8 @@ class ReplicaRouter:
 
     def __init__(self, engines, policy: str = "least_loaded",
                  prefix_len: int = 8, log=print,
-                 clock=time.perf_counter):
+                 # advisory wall_s only; gated metrics are vstep-clocked
+                 clock=time.perf_counter):  # easeylint: allow[wall-clock]
         engines = list(engines)
         if not engines:
             raise ValueError("router needs at least one replica engine")

@@ -372,7 +372,8 @@ class Scheduler:
 
     def __init__(self, pool, prefill_fn, decode_fn,
                  eos_id: int | None = None, policy: str = "continuous",
-                 sampler=None, clock=time.perf_counter,
+                 # advisory wall_s only; gated metrics are vstep-clocked
+                 sampler=None, clock=time.perf_counter,  # easeylint: allow[wall-clock]
                  chunk_step_fn=None, prefill_chunk: int = 0,
                  prefill_chunk_unit: int = 16, vclock=None,
                  verify_fn=None, spec_k: int = 0, drafter=None,
